@@ -1,0 +1,88 @@
+"""Per-op HBM-traffic breakdown of an archived dry-run HLO — the
+"profiler" of the dry-run methodology (EXPERIMENTS §Perf reads these).
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown \
+        results/dryrun/hlo/<tag>.hlo.zst [top_n]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import zstandard  # noqa: E402
+
+from repro.launch import hlo_analysis as H  # noqa: E402
+
+
+def breakdown(text: str, top_n: int = 20):
+    comps, entry = H._split_computations(text)
+    symtabs = {name: H._symbols(lines) for name, lines in comps.items()}
+    touched_cache: dict = {}
+    rows = []
+    stack = set()
+
+    def walk(comp, lines, mult):
+        sym = symtabs.get(comp, {})
+        for line in lines:
+            om = H._OP_RE.match(line)
+            if not om:
+                continue
+            opcode = om.group(3)
+            result = om.group(2)
+            if opcode == "while":
+                bm = H._BODY_RE.search(line)
+                cm = H._COND_RE.search(line)
+                if bm and bm.group(1) in comps and bm.group(1) not in stack:
+                    trips = (H._trip_count(comps[cm.group(1)])
+                             if cm and cm.group(1) in comps else 1)
+                    stack.add(bm.group(1))
+                    walk(bm.group(1), comps[bm.group(1)], mult * trips)
+                    stack.discard(bm.group(1))
+                continue
+            if opcode in H._NO_TRAFFIC_OPS:
+                continue
+            ops_b = [H._shape_bytes(sym.get(o, ""))
+                     for o in H._operands(line, om.end(3))]
+            if "dynamic-update-slice" in line:
+                t = 2.0 * (sum(ops_b) - max(ops_b, default=0))
+            elif "dynamic-slice" in line and opcode != "fusion":
+                t = 2.0 * H._shape_bytes(result)
+            else:
+                if opcode == "fusion":
+                    cm4 = H._CALL_RE.search(line)
+                    if cm4 and cm4.group(1) in comps:
+                        body = cm4.group(1)
+                        if body not in touched_cache:
+                            touched_cache[body] = H._fusion_touched(
+                                comps[body], symtabs.get(body, {}))
+                        tmap = touched_cache[body]
+                        ops_b = [min(b, tmap.get(i, b))
+                                 for i, b in enumerate(ops_b)]
+                t = H._shape_bytes(result) + sum(ops_b)
+            mm = re.search(r'op_name="([^"]*)"', line)
+            name = mm.group(1).split("/")[-1] if mm else opcode
+            rows.append((t * mult, mult, opcode, name, result[:48]))
+
+    walk(entry, comps.get(entry, []), 1.0)
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top_n]
+
+
+def main():
+    path = sys.argv[1]
+    top_n = int(sys.argv[2]) if len(sys.argv) > 2 else 20
+    text = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read()).decode()
+    total = H.analyze_hlo(text)
+    print(f"flops={total.flops/1e12:.2f}TF hbm={total.hbm_bytes/1e9:.1f}GB "
+          f"coll={ {k: round(v/1e9,2) for k,v in total.coll_bytes_by_type.items()} }")
+    for t, mult, opcode, name, res in breakdown(text, top_n):
+        print(f"{t/1e9:9.1f} GB x{mult:6.0f} {opcode:10s} {name[:44]:44s} {res}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Re-run the HLO analyzer over archived .hlo.zst artifacts and patch the
+dry-run JSON records in place — lets analyzer iterations (and §Perf
+accounting fixes) be re-measured without recompiling 80 cells.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import zstandard  # noqa: E402
+
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    dctx = zstandard.ZstdDecompressor()
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(out, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        hf = os.path.join(out, "hlo", tag + ".hlo.zst")
+        if not os.path.exists(hf):
+            continue
+        text = dctx.decompress(open(hf, "rb").read()).decode()
+        rec["hlo_accounting"] = analyze_hlo(text).to_dict()
+        rec["analyzer_version"] = 5
+        json.dump(rec, open(jf, "w"), indent=1)
+        n += 1
+    print(f"re-analyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and dumps
+full rows to results/benchmarks.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.paper_figs import ALL
+
+    os.makedirs("results", exist_ok=True)
+    full = {}
+    print("name,us_per_call,derived")
+    for name, fn in ALL.items():
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        full[name] = {"rows": rows, "derived": derived,
+                      "us_per_call": dt_us}
+        key = next(iter(derived))
+        val = derived[key]
+        if isinstance(val, dict):
+            val = json.dumps(val).replace(",", ";")
+        print(f"{name},{dt_us:.0f},{key}={val}")
+
+    # roofline summary (reads results/dryrun if present)
+    try:
+        from benchmarks.roofline import build_table
+        rows = build_table(mesh="16x16")
+        cells = [r for r in rows if "skipped" not in r]
+        if cells:
+            mean_frac = sum(r["roofline_fraction"] for r in cells) / len(cells)
+            full["roofline"] = {"rows": rows}
+            print(f"roofline_16x16,0,mean_fraction={mean_frac:.3f} "
+                  f"over {len(cells)} cells")
+    except Exception as e:  # dry-run not yet executed
+        print(f"roofline_16x16,0,unavailable({type(e).__name__})")
+
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(full, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

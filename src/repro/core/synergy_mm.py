@@ -1,0 +1,126 @@
+"""``synergy_mm`` — the composable tiled-MM operator (paper C1/C2).
+
+Every dense GEMM in the framework is routed through :func:`synergy_matmul`.
+It does three things:
+
+  1. Registers the GEMM's :class:`~repro.core.job.JobSet` with the active
+     :class:`SynergyTrace` (trace-time metadata: the job decomposition the
+     schedulers, cost model, and roofline analysis operate on).
+  2. Picks the execution engine: the Pallas ``tiled_mm`` kernel (TPU target;
+     validated in interpret mode on CPU) or the XLA dot (CPU dry-run path —
+     keeps the 512-device dry-run HLO clean and lets ``cost_analysis`` see
+     canonical dots).
+  3. Applies the fused epilogue (bias/activation) — a beyond-paper
+     optimization (the paper's PEs write raw C tiles; fusing the epilogue
+     removes one HBM round trip per GEMM).
+
+The job abstraction is exactly the paper's: one job == one output tile of C,
+zero-padded at borders so a single fixed-size engine serves every layer of
+every network ("network-agnostic accelerators").
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .job import JobSet
+
+__all__ = ["SynergyTrace", "synergy_matmul", "current_trace", "DEFAULT_TILE"]
+
+# MXU-aligned default tile for the TPU target; the paper-faithful TS=32
+# baseline is exercised in benchmarks/EXPERIMENTS §Perf.
+DEFAULT_TILE = (256, 256, 256)
+
+_state = threading.local()
+
+
+@dataclasses.dataclass
+class SynergyTrace:
+    """Collects the JobSets of every GEMM traced under this context."""
+
+    jobsets: list[JobSet] = dataclasses.field(default_factory=list)
+    _next_layer_id: int = 0
+
+    def add(self, m: int, n: int, k: int, tile, name: str) -> JobSet:
+        js = JobSet.for_gemm(self._next_layer_id, m, n, k, tile, name=name)
+        self._next_layer_id += 1
+        self.jobsets.append(js)
+        return js
+
+    @property
+    def total_flops(self) -> int:
+        return sum(js.total_flops for js in self.jobsets)
+
+    @property
+    def num_jobs(self) -> int:
+        return sum(js.num_jobs for js in self.jobsets)
+
+    @contextlib.contextmanager
+    def activate(self):
+        prev = getattr(_state, "trace", None)
+        _state.trace = self
+        try:
+            yield self
+        finally:
+            _state.trace = prev
+
+
+def current_trace() -> Optional[SynergyTrace]:
+    return getattr(_state, "trace", None)
+
+
+def _epilogue(y: jax.Array, bias, activation) -> jax.Array:
+    if bias is not None:
+        y = y + bias
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+def synergy_matmul(a: jax.Array, b: jax.Array, *,
+                   bias: jax.Array | None = None,
+                   activation: Callable | None = None,
+                   tile: tuple[int, int, int] | int = DEFAULT_TILE,
+                   name: str = "",
+                   impl: str = "auto",
+                   out_dtype=None,
+                   precision=None) -> jax.Array:
+    """C = act(A @ B + bias) through the Synergy tile-job abstraction.
+
+    a: (..., m, k); b: (k, n).  ``impl``: 'auto' | 'xla' | 'pallas'.
+    """
+    *lead, m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    tr = current_trace()
+    if tr is not None:
+        batch = 1
+        for d in lead:
+            batch *= d
+        tr.add(batch * m, n, k, tile, name=name or "gemm")
+
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.tiled_mm import ops as tiled_ops
+        a2 = a.reshape(-1, k)
+        y = tiled_ops.tiled_matmul(a2, b, tile=tile, bias=bias,
+                                   activation=activation,
+                                   out_dtype=out_dtype)
+        return y.reshape(*lead, m, n)
+    if b.dtype != a.dtype:
+        # storage dtype != compute dtype (e.g. int8 weight-only quant for
+        # decode, §Perf B1): dequant-on-read, accumulate in f32
+        b = b.astype(a.dtype)
+    y = jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        precision=precision,
+        preferred_element_type=jnp.float32)
+    y = _epilogue(y, bias, activation)
+    return y.astype(out_dtype or a.dtype)

@@ -1,0 +1,1 @@
+from .pipeline import synthetic_batches, prefetch, make_batch

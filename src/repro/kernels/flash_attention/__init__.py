@@ -1,0 +1,3 @@
+from .ops import flash_attention
+from .ref import attention_ref
+from .flash_attention import flash_attention_pallas

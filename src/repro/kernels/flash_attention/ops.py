@@ -1,0 +1,38 @@
+"""Jit'd flash-attention wrapper with engine dispatch + shape handling."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "blk_q",
+                                             "blk_k", "impl"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    scale: float | None = None,
+                    blk_q: int = 128,
+                    blk_k: int = 128,
+                    impl: str = "auto") -> jax.Array:
+    """q (B, Hq, S, D); k/v (B, Hkv, Sk, D) -> (B, Hq, S, D).
+
+    impl: 'pallas' (TPU target; interpret on CPU), 'xla' (jnp reference —
+    the dry-run path so HLO stays canonical), or 'auto'.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    s, sk = q.shape[2], k.shape[2]
+    bq = min(blk_q, s)
+    bk = min(blk_k, sk)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, blk_q=bq, blk_k=bk,
+        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (causal, GQA)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), dtype=bool), k=sk - s)
+        s_mat = jnp.where(mask, s_mat, -jnp.inf)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import ssd, ssd_chunked_xla
+from .ref import ssd_ref
+from .ssd import ssd_pallas

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD scan: the direct O(L) recurrence.
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + xdt_t (x) B_t
+    y_t = S_t @ C_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt: jax.Array, dta: jax.Array, bm: jax.Array, cm: jax.Array,
+            state0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """xdt (B,H,L,P), dta (B,H,L), bm/cm (B,L,N) -> y (B,H,L,P), S (B,H,P,N)."""
+    b, h, l, p = xdt.shape
+    n = bm.shape[-1]
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    def step(s, t):
+        a_t = jnp.exp(dta[:, :, t])[..., None, None]          # (B,H,1,1)
+        outer = (xdt[:, :, t, :, None].astype(jnp.float32)
+                 * bm[:, None, t, None, :].astype(jnp.float32))  # (B,H,P,N)
+        s = a_t * s + outer
+        y_t = jnp.einsum("bhpn,bn->bhp", s, cm[:, t].astype(jnp.float32))
+        return s, y_t
+
+    s_fin, ys = jax.lax.scan(step, s0, jnp.arange(l))
+    y = jnp.moveaxis(ys, 0, 2).astype(xdt.dtype)              # (B,H,L,P)
+    return y, s_fin

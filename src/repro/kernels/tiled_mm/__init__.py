@@ -1,0 +1,3 @@
+from .ops import tiled_matmul
+from .ref import tiled_mm_ref
+from .tiled_mm import tiled_mm_pallas

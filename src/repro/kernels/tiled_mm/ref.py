@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the tiled_mm kernel."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_mm_ref(a: jax.Array, b: jax.Array, *,
+                 bias: jax.Array | None = None,
+                 activation: Callable | None = None,
+                 out_dtype=None) -> jax.Array:
+    y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = activation(y)
+    return y.astype(out_dtype or a.dtype)

@@ -1,0 +1,3 @@
+from .mesh import make_production_mesh, make_test_mesh, dp_axes, MODEL_AXIS
+from .sharding import (param_pspecs, input_pspecs, opt_pspecs, state_pspecs,
+                       to_shardings, cache_pspecs)

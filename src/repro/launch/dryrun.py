@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, record memory/cost/collective analysis.
+
+THE FIRST TWO LINES of this file force 512 host devices BEFORE any jax
+import — jax locks the device count at first init.  Never import this
+module from tests/benches (they want 1 device); run it as a process:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k [--multipod] [--out results/dryrun]
+
+Outputs one JSON per cell with: per-device memory analysis, HLO FLOPs and
+bytes (cost_analysis), and collective-traffic accounting (hlo_analysis) —
+the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _mem_dict(mem) -> dict:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    import dataclasses
+    from repro.launch.train import build_train_step
+    from repro.launch.serve import build_prefill_step, build_decode_step
+
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    rec: dict = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kind": cell.kind}
+
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        rec.update(status="skipped",
+                   reason="full-attention arch: long_500k requires "
+                          "sub-quadratic attention (DESIGN.md)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    # `with mesh` = legacy physical-mesh context (required by the dry-run
+    # contract); jax.set_mesh additionally exposes the abstract mesh so the
+    # model's with_sharding_constraint hooks can see the axis names.
+    with mesh, jax.set_mesh(mesh):
+        if cell.kind == "train":
+            jfn, (aval, _), (in_specs, _) = build_train_step(
+                cfg, cell, mesh, donate=False)
+            lowered = jfn.lower(aval, in_specs)
+        elif cell.kind == "prefill":
+            jfn, (aval, _), (in_specs, _) = build_prefill_step(cfg, cell, mesh)
+            lowered = jfn.lower(aval, in_specs)
+        else:
+            jfn, (aval, _), (in_specs, _) = build_decode_step(
+                cfg, cell, mesh, donate=False)
+            lowered = jfn.lower(aval, in_specs["cache"], in_specs["tokens"],
+                                in_specs["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        print(mem)                      # proves it fits (or doesn't)
+        cost = compiled.cost_analysis()
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        rec["memory"] = _mem_dict(mem)
+        cost_d = dict(cost) if cost else {}
+        rec["cost"] = {k: float(v) for k, v in cost_d.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or k == "optimal_seconds")}
+        text = compiled.as_text()
+        rec["hlo_bytes"] = len(text)
+        acct = analyze_hlo(text)  # loop-aware FLOPs/bytes/collectives
+        rec["hlo_accounting"] = acct.to_dict()
+        rec["analyzer_version"] = 4
+        rec["status"] = "ok"
+        if os.environ.get("DRYRUN_SAVE_HLO"):
+            import zstandard
+            d = os.path.join(os.environ.get("DRYRUN_OUT", "results/dryrun"),
+                             "hlo")
+            os.makedirs(d, exist_ok=True)
+            tag = (f"{arch}__{shape}__"
+                   f"{'2x16x16' if multi_pod else '16x16'}")
+            suffix = os.environ.get("DRYRUN_TAG", "")
+            if suffix:
+                tag += "__" + suffix
+            with open(os.path.join(d, tag + ".hlo.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(
+                    text.encode()))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override key=value (perf iterations, "
+                         "e.g. --set param_dtype=int8)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf iterations)")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in ARCHS:
+            for s in SHAPES:
+                print(a, s)
+        return
+
+    assert args.arch and args.shape
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{'2x16x16' if args.multipod else '16x16'}"
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+    if args.tag:
+        tag += "__" + args.tag
+        os.environ["DRYRUN_TAG"] = args.tag
+    try:
+        rec = run_cell(args.arch, args.shape, args.multipod,
+                       overrides=overrides or None)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multipod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

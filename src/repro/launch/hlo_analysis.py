@@ -1,0 +1,430 @@
+"""Post-partitioning HLO text analysis: loop-aware FLOP / HBM / collective
+accounting.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits every
+computation ONCE — a 40-layer ``lax.scan`` body is counted a single time,
+under-reporting FLOPs and bytes by ~n_layers.  This analyzer parses
+``compiled.as_text()`` (the per-device partitioned module) and multiplies
+each op by the trip count of its enclosing while loops (recovered from the
+loop-condition constants).
+
+Accounting model:
+  * flops        — dot/convolution ops: 2 * prod(result dims) *
+                   prod(lhs contracting dims).  Elementwise flops ignored
+                   (the MXU roofline term is dot-dominated).
+  * hbm_bytes    — for every top-level op with real traffic (post-fusion
+                   HLO: fusions, dots, collectives, copies, slices...),
+                   result bytes + operand bytes, operands resolved through
+                   a per-computation symbol table.  In optimized HLO each
+                   such op is one kernel, so operands+results approximate
+                   its HBM traffic.
+  * collectives  — result-shape bytes per op type with loop multiplicity.
+                   The link-time model (2x ring all-reduce etc.) is applied
+                   by the roofline layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HloAccounting", "analyze_hlo", "analyze_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|(?:\w+\[\]))\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-_]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-_]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-_]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-_]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-_]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*(?:\([^)]*\))?.*\{")
+
+_COLLECTIVE_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute", "all-reduce-start",
+                   "all-gather-start", "collective-permute-start",
+                   "reduce-scatter-start", "all-to-all-start"}
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "copy-start",
+    "copy-done", "while", "conditional", "call", "all-reduce-done",
+    "all-gather-done", "collective-permute-done", "reduce-scatter-done",
+    "all-to-all-done", "opt-barrier",
+    # loop-carry copies: XLA:CPU materializes full-buffer copies for
+    # read+update-in-iteration carries (e.g. the KV cache); TPU aliases
+    # donated buffers in place, so copies are excluded from HBM traffic.
+    "copy",
+}
+
+
+def _prod(dims_txt: str) -> int:
+    p = 1
+    for d in dims_txt.split(","):
+        if d:
+            p *= int(d)
+    return p
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_txt):
+        size = _DTYPE_BYTES.get(m.group(1))
+        if size is None:
+            continue
+        total += size * _prod(m.group(2))
+    return total
+
+
+def _first_shape(shape_txt: str):
+    m = _SHAPE_RE.search(shape_txt)
+    if not m:
+        return None, []
+    return m.group(1), [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloAccounting:
+    flops: float
+    hbm_bytes: float
+    coll_bytes_by_type: dict
+    coll_count_by_type: dict
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_type.values()))
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "bytes_by_type": dict(self.coll_bytes_by_type),
+                "count_by_type": dict(self.coll_count_by_type),
+                "total_bytes": self.collective_bytes}
+
+
+def _split_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None and line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _symbols(lines: list[str]) -> dict[str, str]:
+    """name -> result-shape text for one computation."""
+    table = {}
+    for line in lines:
+        m = _OP_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+# cast-like ops: XLA:CPU legalizes bf16 dots by upcasting operands to f32
+# (and hoists weight-stack converts out of scan loops).  A TPU Mosaic
+# pipeline fuses these casts into the consumer, so HBM sees the STORAGE
+# dtype.  We resolve an operand's dtype through chains of such ops.
+_CAST_OPS = {"convert", "bitcast", "copy"}
+
+# ops that make a fusion "cast/layout-only" (no real compute): such fusion
+# kernels exist on CPU but fuse into their consumer on TPU
+_CAST_FUSION_OPS = _CAST_OPS | {"reshape", "transpose", "broadcast",
+                                "parameter", "tuple", "get-tuple-element",
+                                "slice"}
+
+
+def _is_cast_fusion(body_lines: list[str]) -> bool:
+    for line in body_lines:
+        m = _OP_RE.match(line)
+        if m and m.group(3) not in _CAST_FUSION_OPS:
+            return False
+    return True
+
+
+def _defs(lines: list[str]) -> dict[str, tuple[str, str | None, str | None]]:
+    """name -> (opcode, first operand name, called computation if fusion)."""
+    table: dict[str, tuple[str, str | None, str | None]] = {}
+    for line in lines:
+        m = _OP_RE.match(line)
+        if m:
+            ops = _OPERAND_NAME_RE.findall(
+                line[m.end(3):line.find(")", m.end(3)) + 1])
+            call = _CALL_RE.search(line)
+            table[m.group(1)] = (m.group(3), ops[0] if ops else None,
+                                 call.group(1) if call else None)
+    return table
+
+
+def _resolved_bytes(name: str, sym: dict, defs: dict,
+                    cast_fusions: set | None = None) -> int:
+    """Bytes of value `name`: its own element count, dtype resolved through
+    cast chains (storage dtype, as a fused TPU pipeline would see)."""
+    shape_txt = sym.get(name, "")
+    dt, dims = _first_shape(shape_txt)
+    if dt is None:
+        return 0
+    elems = 1
+    for d in dims:
+        elems *= d
+    cur = name
+    for _ in range(6):
+        entry = defs.get(cur)
+        if not entry or not entry[1]:
+            break
+        opcode, first_op, called = entry
+        chase = (opcode in _CAST_OPS
+                 or (opcode == "fusion" and cast_fusions
+                     and called in cast_fusions))
+        if not chase:
+            break
+        cur = first_op
+        src_dt, _ = _first_shape(sym.get(cur, ""))
+        if src_dt is not None:
+            dt = src_dt
+    return _DTYPE_BYTES.get(dt, 4) * elems
+
+
+def _operands(line: str, op_end: int) -> list[str]:
+    """Operand names inside opcode( ... ) — up to the closing paren before
+    any `, attr=` section."""
+    start = line.index("(", op_end)
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_NAME_RE.findall(line[start:end + 1])
+
+
+_PARAM_RE = re.compile(
+    r"^\s+%?([\w.\-_]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))"
+    r"\s+parameter\((\d+)\)")
+
+
+def _fusion_touched(body_lines: list[str], body_sym: dict) -> dict[int, int]:
+    """For each fusion parameter index: bytes actually touched.  A parameter
+    consumed ONLY by dynamic-slice ops contributes its slice results (the
+    kernel gathers a window of a big buffer, e.g. one scan step's saved
+    activations), not the whole buffer."""
+    params: dict[str, tuple[int, int]] = {}   # name -> (idx, full_bytes)
+    for line in body_lines:
+        pm = _PARAM_RE.match(line)
+        if pm:
+            params[pm.group(1)] = (int(pm.group(3)), _shape_bytes(pm.group(2)))
+    touched: dict[int, int] = {}
+    for name, (idx, full) in params.items():
+        ds_bytes = 0
+        other_use = False
+        ref = "%" + name
+        for line in body_lines:
+            if ref not in line:
+                continue
+            om = _OP_RE.match(line)
+            if om and om.group(1) == name:
+                continue  # the definition line
+            if om and om.group(3) == "dynamic-slice":
+                ds_bytes += _shape_bytes(om.group(2))
+            else:
+                other_use = True
+        if not other_use and ds_bytes:
+            touched[idx] = min(full, ds_bytes)
+        else:
+            touched[idx] = full
+    return touched
+
+
+def analyze_hlo(hlo_text: str) -> HloAccounting:
+    comps, entry = _split_computations(hlo_text)
+    entry_lines = comps.get(entry, []) if entry else (
+        max(comps.values(), key=len) if comps else [])
+    symtabs = {name: _symbols(lines) for name, lines in comps.items()}
+    deftabs = {name: _defs(lines) for name, lines in comps.items()}
+    touched_cache: dict[str, dict[int, int]] = {}
+    cast_fusions = {name for name, lines in comps.items()
+                    if _is_cast_fusion(lines)}
+    if entry:
+        sym_entry = symtabs[entry]
+    else:
+        sym_entry = {}
+
+    flops = 0.0
+    hbm = 0.0
+    coll_b = defaultdict(float)
+    coll_n = defaultdict(float)
+    stack: set[str] = set()
+    _use_cache: dict[str, dict] = {}
+
+    def use_index(comp_name: str) -> dict:
+        """name -> [(consumer opcode, consumer name)] for one computation."""
+        if comp_name in _use_cache:
+            return _use_cache[comp_name]
+        idx: dict[str, list] = {}
+        for line2 in comps.get(comp_name, []):
+            m2 = _OP_RE.match(line2)
+            if not m2:
+                continue
+            for o in _operands(line2, m2.end(3)):
+                idx.setdefault(o, []).append((m2.group(3), m2.group(1)))
+        _use_cache[comp_name] = idx
+        return idx
+
+    def walk(comp_name: str, lines: list[str], mult: float,
+             count_bytes: bool) -> None:
+        nonlocal flops, hbm
+        sym = symtabs.get(comp_name, sym_entry)
+        dfs = deftabs.get(comp_name, {})
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            opcode = om.group(3)
+            result_txt = om.group(2)
+
+            if opcode in ("dot", "convolution"):
+                _, rdims = _first_shape(result_txt)
+                r_elems = 1
+                for d in rdims:
+                    r_elems *= d
+                k = 1
+                cm = _CONTRACT_RE.search(line)
+                ops = _operands(line, om.end(3))
+                if cm and ops:
+                    lhs_shape = sym.get(ops[0], "")
+                    _, ldims = _first_shape(lhs_shape)
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+                flops += 2.0 * r_elems * k * mult
+
+            base_op = opcode.replace("-start", "")
+            if opcode in _COLLECTIVE_OPS:
+                dt, dims = _first_shape(result_txt)
+                elems = 1
+                for dd in dims:
+                    elems *= dd
+                # XLA:CPU legalizes bf16 dots to f32, so reduces of dot
+                # partials appear in f32; a TPU program reduces in the
+                # compute dtype.  If every consumer of this collective is a
+                # down-cast, count at the consumer dtype.
+                name = om.group(1)
+                uses = use_index(comp_name)
+                consumers = uses.get(name, [])
+                if consumers and all(c[0] == "convert" for c in consumers):
+                    cdts = [_first_shape(sym.get(c[1], ""))[0]
+                            for c in consumers]
+                    sizes = [_DTYPE_BYTES.get(c, 4) for c in cdts if c]
+                    if sizes:
+                        dt_size = min(min(sizes), _DTYPE_BYTES.get(dt, 4))
+                    else:
+                        dt_size = _DTYPE_BYTES.get(dt, 4)
+                else:
+                    dt_size = _DTYPE_BYTES.get(dt, 4)
+                coll_b[base_op] += dt_size * elems * mult
+                coll_n[base_op] += mult
+
+            is_cast_fus = False
+            if opcode == "fusion":
+                cm0 = _CALL_RE.search(line)
+                is_cast_fus = bool(cm0 and cm0.group(1) in cast_fusions)
+            if (count_bytes and opcode not in _NO_TRAFFIC_OPS
+                    and opcode not in _CAST_OPS and not is_cast_fus):
+                op_names = _operands(line, om.end(3))
+                ops_b = [_resolved_bytes(o, sym, dfs, cast_fusions)
+                         for o in op_names]
+                # match both HLO opcode (dash) and jax metadata (underscore)
+                if ("dynamic-update-slice" in line
+                        or "dynamic_update_slice" in line):
+                    # in-place update: traffic = 2x the written slice, not
+                    # the whole (possibly multi-GB cache/carry) buffer
+                    traffic = 2.0 * (sum(ops_b) - max(ops_b, default=0))
+                elif "dynamic-slice" in line and opcode != "fusion":
+                    traffic = 2.0 * _shape_bytes(result_txt)
+                else:
+                    if opcode == "fusion":
+                        cm4 = _CALL_RE.search(line)
+                        if cm4 and cm4.group(1) in comps:
+                            body = cm4.group(1)
+                            if body not in touched_cache:
+                                touched_cache[body] = _fusion_touched(
+                                    comps[body], symtabs.get(body, {}))
+                            tmap = touched_cache[body]
+                            ops_b = [min(b, tmap.get(i, b))
+                                     for i, b in enumerate(ops_b)]
+                    traffic = _shape_bytes(result_txt) + sum(ops_b)
+                hbm += traffic * mult
+
+            if opcode == "while":
+                bm = _BODY_RE.search(line)
+                cm2 = _COND_RE.search(line)
+                if bm and bm.group(1) in comps and bm.group(1) not in stack:
+                    trips = (_trip_count(comps[cm2.group(1)])
+                             if cm2 and cm2.group(1) in comps else 1)
+                    stack.add(bm.group(1))
+                    walk(bm.group(1), comps[bm.group(1)], mult * trips,
+                         count_bytes)
+                    stack.discard(bm.group(1))
+            elif opcode == "conditional":
+                names = []
+                m3 = _BRANCH_RE.search(line)
+                if m3:
+                    names += [n.strip().lstrip("%")
+                              for n in m3.group(1).split(",")]
+                names += _TF_RE.findall(line)
+                for name in names:
+                    if name in comps and name not in stack:
+                        stack.add(name)
+                        walk(name, comps[name], mult, count_bytes)
+                        stack.discard(name)
+            else:
+                # fusions / reducers / calls: count dot flops inside, but
+                # traffic is already accounted at this (kernel) level.
+                for m4 in _CALL_RE.finditer(line):
+                    name = m4.group(1)
+                    if name in comps and name not in stack:
+                        stack.add(name)
+                        walk(name, comps[name], mult, False)
+                        stack.discard(name)
+
+    walk(entry or "", entry_lines, 1.0, True)
+    return HloAccounting(flops, hbm, dict(coll_b), dict(coll_n))
+
+
+def analyze_collectives(hlo_text: str):
+    """Back-compat wrapper returning the full accounting."""
+    return analyze_hlo(hlo_text)

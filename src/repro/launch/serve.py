@@ -1,0 +1,61 @@
+"""Serving driver: prefill + decode steps and the Synergy continuous-batch
+serving loop (inter-frame pipeline, C4, at request granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import decode_fn, input_specs, param_specs, prefill_fn
+from .sharding import input_pspecs, param_pspecs, to_shardings
+
+__all__ = ["build_prefill_step", "build_decode_step", "serve_state_specs"]
+
+
+def serve_state_specs(cfg: ArchConfig, mesh, mode: str = "train"):
+    aval = param_specs(cfg)
+    return aval, param_pspecs(cfg, aval, mesh, mode=mode)
+
+
+def build_prefill_step(cfg: ArchConfig, cell: ShapeCell, mesh):
+    aval, pspecs = serve_state_specs(cfg, mesh)
+    in_specs = input_specs(cfg, cell)
+    bspecs = input_pspecs(cfg, cell, in_specs, mesh)
+
+    def step(params, batch):
+        return prefill_fn(cfg, params,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          enc_embeds=batch.get("enc_embeds"))
+
+    jfn = jax.jit(step,
+                  in_shardings=(to_shardings(pspecs, mesh),
+                                to_shardings(bspecs, mesh)),
+                  out_shardings=None)
+    return jfn, (aval, pspecs), (in_specs, bspecs)
+
+
+def build_decode_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                      donate: bool = True):
+    """serve_step for decode cells: one new token, seq_len-deep cache."""
+    aval, pspecs = serve_state_specs(cfg, mesh, mode="decode")
+    in_specs = input_specs(cfg, cell)
+    bspecs = input_pspecs(cfg, cell, in_specs, mesh)
+
+    def step(params, cache, tokens, pos):
+        return decode_fn(cfg, params, cache, tokens, pos)
+
+    jfn = jax.jit(
+        step,
+        in_shardings=(to_shardings(pspecs, mesh),
+                      to_shardings(bspecs["cache"], mesh),
+                      to_shardings(bspecs["tokens"], mesh),
+                      to_shardings(bspecs["pos"], mesh)),
+        out_shardings=(None, to_shardings(bspecs["cache"], mesh)),
+        donate_argnums=(1,) if donate else ())
+    return jfn, (aval, pspecs), (in_specs, bspecs)

@@ -1,0 +1,205 @@
+"""Sharding rules: ArchConfig + mesh -> PartitionSpecs for params, inputs,
+caches, optimizer state.
+
+Scheme (see DESIGN.md §4):
+  * DP/FSDP over ('pod','data') / 'data'; TP/EP over 'model'.
+  * Megatron column/row parallel attention+MLP; vocab-sharded embeddings;
+    expert-sharded MoE; P-dim-sharded SSD (see models/ssm.py docstring).
+  * Divisibility fallbacks are automatic: an axis is only assigned when it
+    divides the dim (so reduced test configs on 2x2 meshes and full configs
+    on 16x16 use the same rule table).
+  * KV caches shard the SEQUENCE dim on 'model' (flash-decoding style):
+    the three decode psums (max, sum, PV-combine) are tiny, and S always
+    divides 16 for the assigned cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from .mesh import MODEL_AXIS, dp_axes
+
+__all__ = ["param_pspecs", "input_pspecs", "opt_pspecs", "state_pspecs",
+           "to_shardings", "cache_pspecs"]
+
+
+def _div(axis: str | tuple, size: int, mesh) -> Any:
+    """Return axis spec if it evenly divides `size`, else None."""
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else axis
+    total = 1
+    for n in names:
+        total *= mesh.shape[n]
+    return axis if size % total == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ArchConfig, params_aval, mesh,
+                 mode: str = "train") -> Any:
+    """PartitionSpec tree matching the params tree.
+
+    mode='decode' (§Perf D2): attention projections shard only when the KV
+    heads divide the mesh — the decode cache is hd-sharded, and
+    head-sharded Q against hd-sharded K makes the partitioner all-gather
+    the whole cache (13.7 GB/layer on dbrx).  Attention FLOPs are trivial
+    at decode, so replicating those projections is the right trade."""
+    m = MODEL_AXIS
+    fsdp = "data" if cfg.fsdp and "data" in mesh.axis_names else None
+    shard_heads = cfg.n_heads and cfg.n_heads % mesh.shape[m] == 0
+    shard_kv = cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape[m] == 0
+    if mode == "decode":
+        shard_heads = shard_heads and shard_kv
+
+    def spec_for(path: str, v) -> P:
+        shape = v.shape
+        # strip the stacked-layer leading dim for blocks/encoder stacks
+        stacked = (path.startswith("blocks/") or path.startswith("encoder/"))
+        inner = shape[1:] if stacked else shape
+
+        def out(*axes):
+            axes = [_div(a, d, mesh) if a else None
+                    for a, d in zip(axes, inner)]
+            return P(*( [None] + axes if stacked else axes ))
+
+        if path == "embed":
+            return P(_div(m, shape[0], mesh), _div(fsdp, shape[1], mesh))
+        if path == "lm_head":
+            return P(_div(fsdp, shape[0], mesh), _div(m, shape[1], mesh))
+        if path in ("final_norm", "enc_norm"):
+            return P(None)
+
+        leaf = path.split("/")[-1]
+        if "/attn/" in path or "/cross/" in path:
+            if leaf == "wq":
+                return out(fsdp, m if shard_heads else None)
+            if leaf in ("wk", "wv"):
+                # kv shards with heads only when kv divides (g==1 archs);
+                # otherwise replicated and activations are repeated to Hq.
+                return out(fsdp, m if (shard_heads and shard_kv) else None)
+            if leaf == "wo":
+                return out(m if shard_heads else None, fsdp)
+        if "/mlp/" in path:
+            if leaf == "wi":
+                return out(fsdp, m)
+            if leaf == "wo":
+                return out(m, fsdp)
+        if "/moe/" in path:
+            if leaf == "router":
+                return out(None, None)
+            if leaf == "w1":
+                return out(m, fsdp, None)
+            if leaf == "w2":
+                return out(m, None, fsdp)
+        if "/mixer/" in path:
+            if leaf in ("wz", "wx"):
+                return out(fsdp, None, m)      # (d, H, P): shard P
+            if leaf in ("wbc", "wdt"):
+                return out(fsdp, None)
+            if leaf == "conv_wx":
+                return out(None, None, m)
+            if leaf == "norm_scale":
+                return out(None, m)
+            if leaf == "out_proj":
+                return out(None, m, fsdp)      # (H, P, d): row-parallel on P
+            return out(*([None] * len(inner)))
+        # norms / biases / anything else: replicated (beyond leading L)
+        return out(*([None] * len(inner)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, v: spec_for(_path_str(path), v), params_aval)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_aval, mesh, batch: int) -> Any:
+    m = MODEL_AXIS
+    dp = dp_axes(mesh)
+
+    def spec_for(path: str, v) -> P:
+        shape = v.shape
+        if path.endswith(("k", "v", "xk", "xv")):
+            # (n_layers, B, Hkv, S, hd): shard HEAD_DIM on model (§Perf D2).
+            # Sequence-sharding made the per-token cache write a dynamic-
+            # position update into a sharded dim — the SPMD partitioner
+            # lowers that to a masked SELECT over the FULL cache per layer.
+            # hd % 16 == 0 for every assigned arch; the cost is a small
+            # per-layer scores psum instead.
+            return P(None, _div(dp, shape[1], mesh), None, None,
+                     _div(m, shape[4], mesh))
+        if path.endswith("ssm"):
+            # (L, B, H, P, N): shard P
+            return P(None, _div(dp, shape[1], mesh), None,
+                     _div(m, shape[3], mesh), None)
+        if path.endswith("conv_x"):
+            # (L, B, K-1, H, P)
+            return P(None, _div(dp, shape[1], mesh), None, None,
+                     _div(m, shape[4], mesh))
+        if path.endswith("conv_bc"):
+            return P(None, _div(dp, shape[1], mesh), None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, v: spec_for(_path_str(path), v), cache_aval)
+
+
+def input_pspecs(cfg: ArchConfig, cell: ShapeCell, specs: dict, mesh) -> dict:
+    dp = dp_axes(mesh)
+    b = cell.global_batch
+    out: dict[str, Any] = {}
+    for name, v in specs.items():
+        if name == "pos":
+            out[name] = P()
+        elif name == "cache":
+            out[name] = cache_pspecs(cfg, v, mesh, b)
+        else:
+            batch_axis = _div(dp, v.shape[0], mesh)
+            out[name] = P(batch_axis, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def opt_pspecs(param_specs, opt_aval, optimizer: str) -> Any:
+    """Optimizer-state specs derived from param specs."""
+    if optimizer == "adamw":
+        return {"m": param_specs, "v": param_specs, "step": P()}
+    # adafactor: vr drops last dim's spec, vc drops second-to-last
+    def stats_spec(pspec: P, stat: dict) -> dict:
+        parts = list(pspec)
+        if "vr" in stat:
+            return {"vr": P(*parts[:-1]),
+                    "vc": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": pspec}
+
+    flat_p, treedef = jax.tree.flatten(param_specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    flat_s = treedef.flatten_up_to(opt_aval["stats"])
+    stats = treedef.unflatten([stats_spec(p, s)
+                               for p, s in zip(flat_p, flat_s)])
+    return {"stats": stats, "step": P()}
+
+
+def state_pspecs(cfg: ArchConfig, state_aval, mesh) -> dict:
+    pspecs = param_pspecs(cfg, state_aval["params"], mesh)
+    return {
+        "params": pspecs,
+        "opt": opt_pspecs(pspecs, state_aval["opt"], cfg.optimizer),
+        "step": P(),
+    }
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

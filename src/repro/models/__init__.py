@@ -1,0 +1,4 @@
+from .model_zoo import (init_model, loss_fn, prefill_fn, decode_fn,
+                        input_specs, cache_specs, param_specs, model_flops)
+from .transformer import init_lm, lm_forward, lm_loss, init_cache, decode_step, prefill
+from .cnn import CNNConfig, init_cnn, cnn_forward, build_simnet

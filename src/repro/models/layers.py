@@ -1,0 +1,95 @@
+"""Shared neural-net layers (functional, pytree params).
+
+All dense projections route through :func:`repro.core.synergy_mm.synergy_matmul`
+so every GEMM in every architecture is visible to the Synergy job tracer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.synergy_mm import synergy_matmul
+
+__all__ = ["rms_norm", "layer_norm", "rope", "dense", "glu_mlp",
+           "init_dense", "init_glu_mlp", "softmax_xent"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding.  x (..., S, D) with D even; positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, name: str = "dense", **kw) -> jax.Array:
+    return synergy_matmul(x, w, name=name, **kw)
+
+
+_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_glu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_dense(k1, d_model, 2 * d_ff, dtype),   # gate & up fused
+        "wo": init_dense(k2, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(params: dict, x: jax.Array, act: str = "silu",
+            name: str = "mlp") -> jax.Array:
+    """SwiGLU (act='silu', llama-style) or GeGLU (act='gelu', gemma-style)."""
+    h = dense(x, params["wi"], name=f"{name}/wi")
+    gate, up = jnp.split(h, 2, axis=-1)
+    return dense(_ACTS[act](gate) * up, params["wo"], name=f"{name}/wo")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) fp32-softmaxed."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss

@@ -1,0 +1,80 @@
+"""Model-zoo facade: ArchConfig -> init / step fns / input specs.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input of a shape cell — weak-type-correct, shardable, zero
+allocation — which is what the multi-pod dry-run lowers against.
+Modality frontends (vlm/audio) are STUBS per the assignment: the specs
+carry precomputed patch/frame embeddings instead of pixels/audio.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from .transformer import (decode_step, init_cache, init_lm, lm_forward,
+                          lm_loss, prefill)
+
+__all__ = ["init_model", "loss_fn", "prefill_fn", "decode_fn",
+           "input_specs", "cache_specs", "param_specs", "model_flops"]
+
+init_model = init_lm
+loss_fn = lm_loss
+prefill_fn = prefill
+decode_fn = decode_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell."""
+    b, s = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    specs: dict[str, Any] = {}
+    if cell.kind == "train":
+        if cfg.takes_embeddings:
+            specs["embeds"] = _sds((b, s, d), jnp.bfloat16)
+        else:
+            specs["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.family == "audio":
+            specs["enc_embeds"] = _sds((b, cfg.encoder_len, d), jnp.bfloat16)
+        specs["labels"] = _sds((b, s), jnp.int32)
+    elif cell.kind == "prefill":
+        if cfg.takes_embeddings:
+            specs["embeds"] = _sds((b, s, d), jnp.bfloat16)
+        else:
+            specs["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.family == "audio":
+            specs["enc_embeds"] = _sds((b, cfg.encoder_len, d), jnp.bfloat16)
+    else:  # decode: one new token against a seq_len-deep cache
+        if cfg.takes_embeddings:
+            specs["tokens"] = _sds((b, 1, d), jnp.bfloat16)
+        else:
+            specs["tokens"] = _sds((b, 1), jnp.int32)
+        specs["pos"] = _sds((), jnp.int32)
+        specs["cache"] = cache_specs(cfg, b, s)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else jnp.bfloat16
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype=dt))
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: init_lm(cfg, jax.random.key(0)))
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6·N·D for train, 2·N·D forward-only (N = active params)."""
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n = cfg.n_active_params()
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult) * n * tokens

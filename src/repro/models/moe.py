@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN (dbrx, kimi-k2) — Synergy job view: each expert's
+FFN GEMMs are tile-job sets; routing decides which jobs exist per step, the
+EP sharding spreads them over the `model` axis.
+
+Dispatch is **expert-choice with per-group capacity** (Zhou et al.; also the
+shape-friendly scheme TPU MoE frameworks use): within each token group,
+every expert picks its top-C tokens by router score.  This keeps all shapes
+static (C = T·k·cf/E), needs no sorting network, and under pjit the
+gather/scatter lower to clean collectives: token groups shard over `data`,
+the expert dimension of the weights over `model`, and the combine psum is
+the only cross-`model` traffic.
+
+Token-choice top-k with a one-hot capacity dispatch (the dbrx/kimi papers'
+routing) is provided as a small-scale oracle (``moe_ffn_tc``) and used in
+tests; the EC adaptation is recorded in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _ACTS, init_dense
+
+__all__ = ["init_moe", "moe_ffn", "moe_ffn_tc", "ec_capacity"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32) -> dict:
+    kg, k1, k2 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    return {
+        "router": init_dense(kg, d_model, n_experts, jnp.float32),
+        "w1": (jax.random.normal(k1, (n_experts, d_model, 2 * d_ff))
+               * scale_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (n_experts, d_ff, d_model))
+               * scale_out).astype(dtype),
+    }
+
+
+def ec_capacity(tokens_per_group: int, n_experts: int, top_k: int,
+                capacity_factor: float) -> int:
+    c = int(tokens_per_group * top_k * capacity_factor / n_experts)
+    c = -(-max(c, 1) // 4) * 4          # round up to a multiple of 4
+    return max(1, min(tokens_per_group, c))
+
+
+def moe_ffn(params: dict, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25, act: str = "silu",
+            name: str = "moe") -> jax.Array:
+    """Expert-choice MoE.  x (G, T, d) — G token groups (batch dim for
+    train/prefill; a single group for decode).  Returns (G, T, d)."""
+    g, t, d = x.shape
+    e = params["router"].shape[1]
+    c = ec_capacity(t, e, top_k, capacity_factor)
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,T,E)
+    gate, idx = jax.lax.top_k(probs.transpose(0, 2, 1), c)     # (G,E,C)
+
+    xe = jnp.take_along_axis(x[:, None, :, :],
+                             idx[..., None], axis=2)           # (G,E,C,d)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w1"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    gate_h, up = jnp.split(h, 2, axis=-1)
+    h = _ACTS[act](gate_h) * up
+    o = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    o = o * gate[..., None].astype(o.dtype)
+
+    y = jnp.zeros((g, t, d), o.dtype)
+    y = jax.vmap(lambda yg, og, ig: yg.at[ig.reshape(-1)].add(
+        og.reshape(-1, d)))(y, o, idx)
+    return y.astype(x.dtype)
+
+
+def moe_ffn_tc(params: dict, x: jax.Array, *, top_k: int,
+               act: str = "silu") -> jax.Array:
+    """Token-choice top-k oracle (dense over experts — small scale only).
+    Every token's output = sum of its top-k experts weighted by the
+    normalized router probabilities (dbrx/kimi routing semantics)."""
+    g, t, d = x.shape
+    e = params["router"].shape[1]
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)                   # (G,T,K)
+    topv = topv / topv.sum(axis=-1, keepdims=True)
+    # dense compute of all experts, then gather the chosen ones
+    h = jnp.einsum("gtd,edf->gtef", x, params["w1"])
+    gate_h, up = jnp.split(h, 2, axis=-1)
+    h = _ACTS[act](gate_h) * up
+    o = jnp.einsum("gtef,efd->gted", h, params["w2"])          # (G,T,E,d)
+    sel = jnp.take_along_axis(o, topi[..., None], axis=2)      # (G,T,K,d)
+    return (sel * topv[..., None].astype(sel.dtype)).sum(axis=2).astype(x.dtype)

@@ -1,0 +1,147 @@
+"""Mamba2 block (SSD) — used by mamba2-130m and the zamba2 hybrid.
+
+Block layout (Dao & Gu 2024): projections -> [z | x | B | C | dt], causal
+depthwise conv1d over x and (B,C), SiLU, SSD scan (the Pallas/XLA chunked
+kernel), gated RMSNorm (y * silu(z)), out projection.
+
+TP note (16-way `model` axis): the SSD head count (24 for mamba2-130m, 80
+for zamba2) does not divide 16, but the head dim P (=64) does — and P is a
+pure batch dimension of the scan (all SSD einsums contract Q or N, never
+P).  So every x/z tensor is kept STRUCTURED as (..., H, P) with P sharded
+on `model`: the whole SSM block then runs with zero collectives except the
+out-projection psum (row-parallel).  This is why the projections are
+separate structured weights instead of one fused in_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ssd
+from .layers import init_dense
+
+__all__ = ["init_mamba2", "mamba2_block", "mamba2_decode_step",
+           "init_mamba2_state", "CONV_K"]
+
+CONV_K = 4
+
+
+def init_mamba2(key, d_model: int, d_inner: int, ssm_state: int,
+                head_dim: int, dtype=jnp.float32) -> dict:
+    h = d_inner // head_dim
+    n = ssm_state
+    keys = jax.random.split(key, 7)
+    scale = d_model ** -0.5
+
+    def w3(k, out_a, out_b):
+        return (jax.random.normal(k, (d_model, out_a, out_b))
+                * scale).astype(dtype)
+
+    return {
+        "wz": w3(keys[0], h, head_dim),
+        "wx": w3(keys[1], h, head_dim),
+        "wbc": init_dense(keys[2], d_model, 2 * n, dtype),
+        "wdt": init_dense(keys[3], d_model, h, dtype),
+        "conv_wx": (jax.random.normal(keys[4], (CONV_K, h, head_dim))
+                    / CONV_K).astype(dtype),
+        "conv_wbc": (jax.random.normal(keys[5], (CONV_K, 2 * n))
+                     / CONV_K).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((h, head_dim), dtype),
+        "out_proj": (jax.random.normal(keys[6], (h, head_dim, d_model))
+                     * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _gated_rms_hp(y: jax.Array, z: jax.Array, scale: jax.Array,
+                  eps: float) -> jax.Array:
+    """RMSNorm over the full (H, P) inner dim of y * silu(z)."""
+    dt = y.dtype
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(jnp.square(g), axis=(-2, -1), keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def _conv_shift(x: jax.Array, i: int, l: int):
+    """x padded (B, L+K-1, ...) -> window i (B, L, ...)."""
+    return jax.lax.dynamic_slice_in_dim(x, i, l, axis=1)
+
+
+def mamba2_block(params: dict, x: jax.Array, *, d_inner: int, ssm_state: int,
+                 head_dim: int, chunk: int = 128, eps: float = 1e-5,
+                 impl: str = "auto", name: str = "mamba") -> jax.Array:
+    """x (B, L, d) -> (B, L, d)."""
+    b, l, _ = x.shape
+    n = ssm_state
+    h = d_inner // head_dim
+
+    z = jnp.einsum("bld,dhp->blhp", x, params["wz"].astype(x.dtype))
+    xs = jnp.einsum("bld,dhp->blhp", x, params["wx"].astype(x.dtype))
+    bc = jnp.einsum("bld,dn->bln", x, params["wbc"].astype(x.dtype))
+    dt = jnp.einsum("bld,dh->blh", x, params["wdt"].astype(x.dtype))
+
+    # causal depthwise conv1d (kernel CONV_K), structured for x / flat for BC
+    xs_p = jnp.pad(xs, ((0, 0), (CONV_K - 1, 0), (0, 0), (0, 0)))
+    xs = sum(_conv_shift(xs_p, i, l) * params["conv_wx"][i][None, None]
+             for i in range(CONV_K))
+    bc_p = jnp.pad(bc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    bc = sum(_conv_shift(bc_p, i, l) * params["conv_wbc"][i][None, None]
+             for i in range(CONV_K))
+    xs = jax.nn.silu(xs)
+    bc = jax.nn.silu(bc)
+    bm, cm = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y, _ = ssd(xs, dt, a, bm, cm, chunk=chunk, impl=impl)   # (B,L,H,P)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = _gated_rms_hp(y, z, params["norm_scale"], eps)
+    return jnp.einsum("blhp,hpd->bld", y,
+                      params["out_proj"].astype(y.dtype)).astype(x.dtype)
+
+
+def init_mamba2_state(batch: int, d_inner: int, ssm_state: int,
+                      head_dim: int, dtype=jnp.float32) -> dict:
+    h = d_inner // head_dim
+    return {
+        "conv_x": jnp.zeros((batch, CONV_K - 1, h, head_dim), dtype),
+        "conv_bc": jnp.zeros((batch, CONV_K - 1, 2 * ssm_state), dtype),
+        "ssm": jnp.zeros((batch, h, head_dim, ssm_state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(params: dict, x: jax.Array, state: dict, *,
+                       d_inner: int, ssm_state: int, head_dim: int,
+                       eps: float = 1e-5, name: str = "mamba"):
+    """One-token decode.  x (B, 1, d) -> (y (B, 1, d), new state)."""
+    b = x.shape[0]
+    n = ssm_state
+    h = d_inner // head_dim
+
+    z = jnp.einsum("bld,dhp->blhp", x, params["wz"].astype(x.dtype))
+    xs = jnp.einsum("bld,dhp->blhp", x, params["wx"].astype(x.dtype))
+    bc = jnp.einsum("bld,dn->bln", x, params["wbc"].astype(x.dtype))
+    dt = jnp.einsum("bld,dh->blh", x, params["wdt"].astype(x.dtype))
+
+    win_x = jnp.concatenate([state["conv_x"], xs], axis=1)      # (B,K,H,P)
+    win_bc = jnp.concatenate([state["conv_bc"], bc], axis=1)    # (B,K,2N)
+    xs1 = jax.nn.silu((win_x * params["conv_wx"][None]).sum(axis=1))
+    bc1 = jax.nn.silu((win_bc * params["conv_wbc"][None]).sum(axis=1))
+    bm, cm = bc1[..., :n], bc1[..., n:]
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt1 * a[None, :])                           # (B,H)
+    xdt = xs1.astype(jnp.float32) * dt1[..., None]              # (B,H,P)
+    s = state["ssm"] * decay[..., None, None] + (
+        xdt[..., :, None] * bm[:, None, None, :])               # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", s, cm.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xs1.astype(jnp.float32)
+    y = _gated_rms_hp(y[:, None].astype(x.dtype), z,
+                      params["norm_scale"], eps)                # (B,1,H,P)
+    out = jnp.einsum("blhp,hpd->bld", y,
+                     params["out_proj"].astype(y.dtype)).astype(x.dtype)
+    return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "ssm": s}

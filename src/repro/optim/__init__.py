@@ -1,0 +1,5 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
+                    clip_by_global_norm, global_norm)
+from .adafactor import AdafactorConfig, adafactor_init, adafactor_update
+from .compress import (quantize_int8, dequantize_int8, compress_tree,
+                       decompress_tree, init_error_feedback)

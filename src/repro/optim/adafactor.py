@@ -1,0 +1,74 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no first
+moment — the memory-sane optimizer for the 132B/1T MoE archs (second-moment
+storage drops from O(params) fp32 to O(rows + cols))."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorConfig", "adafactor_init", "adafactor_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8           # beta2_t = 1 - step**-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 32
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 32 and p.shape[-2] >= 32
+
+
+def adafactor_init(params) -> dict:
+    def init(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"stats": jax.tree.map(init, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: AdafactorConfig, grads, state: dict, params):
+    step = state["step"] + 1
+    beta2 = 1.0 - jnp.asarray(step, jnp.float32) ** (-cfg.decay)
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps
+        if _factored(p):
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True)[..., None], cfg.eps)
+                * vc[..., None, :])
+            update = g * jax.lax.rsqrt(jnp.maximum(denom, cfg.eps))
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            update = g * jax.lax.rsqrt(jnp.maximum(v, cfg.eps))
+            new_s = {"v": v}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            update = update + cfg.weight_decay * p32
+        return (p32 - cfg.lr * update).astype(p.dtype), new_s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state["stats"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, {"stats": new_s, "step": step}, {}

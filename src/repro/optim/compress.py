@@ -1,0 +1,73 @@
+"""Gradient / delta compression: blockwise int8 quantization with error
+feedback.  Used by the cross-pod local-SGD synchronizer
+(``repro.runtime.local_sgd``) to cut inter-pod ICI traffic ~4x, and
+available for any explicit gradient exchange.
+
+Error feedback (Seide et al. 2014): the quantization residual is carried to
+the next round so the compression bias vanishes in expectation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
+           "decompress_tree", "init_error_feedback"]
+
+_BLOCK = 256
+
+
+def _blocked(x: jax.Array):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _BLOCK), pad
+
+
+def quantize_int8(x: jax.Array):
+    """-> (q int8 blocks, scales fp32, pad).  Blockwise symmetric."""
+    blocks, pad = _blocked(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, pad: int, shape,
+                    dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def init_error_feedback(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def compress_tree(tree, err):
+    """Quantize tree + error feedback -> (quantized tree, new error)."""
+    def one(x, e):
+        x32 = x.astype(jnp.float32) + e
+        q, s, pad = quantize_int8(x32)
+        deq = dequantize_int8(q, s, pad, x.shape)
+        return (q, s), x32 - deq
+
+    flat_x, treedef = jax.tree.flatten(tree)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(x, e) for x, e in zip(flat_x, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def decompress_tree(qtree, shapes_tree, dtype=jnp.float32):
+    def one(qs, ref):
+        q, s = qs
+        pad = (-ref.size) % _BLOCK
+        return dequantize_int8(q, s, pad, ref.shape, dtype)
+
+    flat_q, treedef = jax.tree.flatten(qtree,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    flat_r = treedef.flatten_up_to(shapes_tree)
+    return treedef.unflatten([one(q, r) for q, r in zip(flat_q, flat_r)])

@@ -1,0 +1,4 @@
+from .fault_tolerance import (HeartbeatMonitor, FailureEvent,
+                              run_with_recovery, plan_elastic_mesh)
+from .straggler import StragglerRebalancer
+from .local_sgd import sync_pods_compressed, crosspod_traffic_bytes

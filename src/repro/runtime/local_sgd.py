@@ -1,0 +1,63 @@
+"""Cross-pod local SGD with compressed delta synchronization.
+
+The inter-pod links are the slowest fabric in a multi-pod job, and the
+per-step gradient all-reduce crosses them 100s of times per second.  Local
+SGD (a.k.a. periodic parameter averaging) trains each pod's DP group
+independently for ``sync_every`` steps, then averages PARAMETER DELTAS
+across pods — with blockwise-int8 compression + error feedback
+(``repro.optim.compress``), cutting cross-pod traffic by
+~4x * sync_every compared to per-step fp32 gradient all-reduce.
+
+Expressed as a pure function over the 'pod' mesh axis so it jits into the
+multi-pod program (tested on the 2x2x2 CPU mesh in tests/test_runtime.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import quantize_int8, dequantize_int8
+
+__all__ = ["sync_pods_compressed", "crosspod_traffic_bytes"]
+
+
+def sync_pods_compressed(params, anchor, err, *, axis_name: str = "pod"):
+    """INSIDE shard_map/pjit over the pod axis: average each pod's drift
+    from the shared anchor, int8-compressed, with error feedback.
+
+    params: current per-pod params; anchor: params at last sync (identical
+    across pods); err: error-feedback state.  Returns (new params, new
+    anchor, new err)."""
+    n_pods = jax.lax.psum(1, axis_name)
+
+    def sync_leaf(p, a, e):
+        delta = (p - a).astype(jnp.float32) + e
+        q, scale, pad = quantize_int8(delta)
+        deq = dequantize_int8(q, scale, pad, p.shape)
+        new_e = delta - deq
+        # the all-reduce moves int8+scales in a real fabric; numerically we
+        # average the dequantized deltas (bit-identical to decompress-sum)
+        mean_delta = jax.lax.pmean(deq, axis_name)
+        new_p = (a.astype(jnp.float32) + mean_delta).astype(p.dtype)
+        return new_p, new_e
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = treedef.flatten_up_to(anchor)
+    flat_e = treedef.flatten_up_to(err)
+    out = [sync_leaf(p, a, e) for p, a, e in zip(flat_p, flat_a, flat_e)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return new_params, new_params, new_err
+
+
+def crosspod_traffic_bytes(params, *, compressed: bool) -> int:
+    """Per-sync traffic: int8 + fp32 block scales vs fp32."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        n = p.size
+        if compressed:
+            total += n + (-(-n // 256)) * 4
+        else:
+            total += n * 4
+    return total

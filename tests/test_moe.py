@@ -1,0 +1,72 @@
+"""MoE dispatch mechanics: EC gather/scatter vs explicit loop; TC oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import ec_capacity, init_moe, moe_ffn, moe_ffn_tc
+
+
+def _setup(g=2, t=16, d=8, e=4, seed=0):
+    params = init_moe(jax.random.key(seed), d, 16, e)
+    x = jax.random.normal(jax.random.key(seed + 1), (g, t, d))
+    return params, x
+
+
+def _moe_ec_loop(params, x, top_k, capacity_factor, act="silu"):
+    """Explicit per-expert loop implementing the same EC semantics."""
+    g, t, d = x.shape
+    e = params["router"].shape[1]
+    c = ec_capacity(t, e, top_k, capacity_factor)
+    out = np.zeros((g, t, d), np.float32)
+    for gi in range(g):
+        logits = np.asarray(x[gi] @ params["router"])
+        probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+        for ei in range(e):
+            order = np.argsort(-probs[:, ei], kind="stable")[:c]
+            xe = np.asarray(x[gi])[order]                      # (C, d)
+            h = xe @ np.asarray(params["w1"][ei])
+            gate, up = np.split(h, 2, axis=-1)
+            h = np.asarray(jax.nn.silu(jnp.asarray(gate))) * up
+            o = h @ np.asarray(params["w2"][ei])
+            for ci, ti in enumerate(order):
+                out[gi, ti] += o[ci] * probs[ti, ei]
+    return out
+
+
+def test_ec_matches_loop():
+    params, x = _setup()
+    y = moe_ffn(params, x, top_k=2, capacity_factor=1.0)
+    ref = _moe_ec_loop(params, x, 2, 1.0)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_tc_oracle_weights_normalized():
+    params, x = _setup(seed=3)
+    y = moe_ffn_tc(params, x, top_k=2)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_capacity_bounds():
+    assert ec_capacity(1, 384, 8, 1.25) == 1
+    assert ec_capacity(4096, 384, 8, 1.25) >= 4096 * 8 // 384
+    assert ec_capacity(10, 4, 2, 1.0) <= 10
+
+
+def test_ec_grad_finite():
+    params, x = _setup(seed=5)
+    loss = lambda p: jnp.sum(moe_ffn(p, x, top_k=2) ** 2)
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_decode_single_group():
+    """Decode path: one group over the batch (T == B tokens)."""
+    params, _ = _setup()
+    xb = jax.random.normal(jax.random.key(9), (1, 8, 8))   # (1, B, d)
+    y = moe_ffn(params, xb, top_k=2, capacity_factor=1.25)
+    assert y.shape == xb.shape
+    assert bool(jnp.isfinite(y).all())
