@@ -11,7 +11,9 @@ import os
 import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)   # make `benchmarks.*` importable as a script
 
 
 def main() -> None:
@@ -44,6 +46,18 @@ def main() -> None:
                   f"over {len(cells)} cells")
     except Exception as e:  # dry-run not yet executed
         print(f"roofline_16x16,0,unavailable({type(e).__name__})")
+
+    # per-engine telemetry accumulated by the unified dispatch surface
+    from repro.engines import list_engines
+    engines = {}
+    for eng in list_engines():
+        t = eng.telemetry
+        if t.gemms:
+            engines[eng.name] = {"gemms": t.gemms, "jobs": t.jobs,
+                                 "busy_s_est": t.busy_s,
+                                 "bytes_moved": t.bytes_moved}
+            print(f"engine_{eng.name},0,jobs={t.jobs}")
+    full["engine_telemetry"] = engines
 
     with open("results/benchmarks.json", "w") as f:
         json.dump(full, f, indent=1, default=str)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_cnns import PAPER_CNNS
-from repro.core.pipeline import ThreadedPipeline
+from repro.core.pipeline import EngineStage, ThreadedPipeline
 from repro.core.scheduler import simulate, single_thread_latency, search_sc
 from repro.core.synergy_mm import SynergyTrace
 from repro.models.cnn import build_simnet, cnn_forward, init_cnn
@@ -33,10 +33,13 @@ def main():
     for js in tr.jobsets:
         print(f"  {js.name:<22s} m={js.m:<5d} n={js.n:<4d} k={js.k:<5d} "
               f"jobs={js.num_jobs:<3d} pad_waste={js.padding_waste:5.1%}")
+    for name, t in tr.engine_stats.items():
+        print(f"  dispatched to {name}: {t.gemms} GEMMs / {t.jobs} jobs "
+              f"(~{t.busy_s*1e3:.2f} ms est busy)")
 
-    # --- inter-frame pipeline over real JAX layer stages -------------------
-    conv = jax.jit(lambda p, xx: cnn_forward(cfg, p, xx))
-    stages = [("infer", lambda f: conv(params, f)),
+    # --- inter-frame pipeline over engine-backed stages --------------------
+    conv = jax.jit(lambda p, xx: cnn_forward(cfg, p, xx, engine="xla"))
+    stages = [EngineStage("infer", lambda f: conv(params, f), engine="xla"),
               ("postproc", lambda lg: int(jnp.argmax(lg)))]
     frames = [jax.random.normal(jax.random.key(i),
                                 (1, cfg.input_hw, cfg.input_hw, cfg.cin))

@@ -37,6 +37,10 @@ def main():
     for js in tr.jobsets[:4]:
         print(f"  layer {js.layer_id:<2d} {js.name:<22s} "
               f"m={js.m:<6d} n={js.n:<6d} k={js.k:<5d} jobs={js.num_jobs}")
+    # where the dispatcher routed the work (the unified engine registry)
+    for name, t in tr.engine_stats.items():
+        print(f"  engine {name:<10s} gemms={t.gemms:<3d} jobs={t.jobs:<5d} "
+              f"busy~{t.busy_s*1e3:.2f}ms bytes={t.bytes_moved/1e6:.1f}MB")
 
     # --- a few train steps -------------------------------------------------
     opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)

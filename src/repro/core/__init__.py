@@ -1,12 +1,17 @@
 """Synergy core: tile-job decomposition, heterogeneous clusters,
-work-stealing scheduling, and inter-frame pipelining."""
+work-stealing scheduling, and inter-frame pipelining.
+
+All dense compute dispatches through the engine registry in
+:mod:`repro.engines`; the clusters/scheduler below are views over the same
+registered cost models."""
 
 from .job import Job, JobSet, ceil_div
-from .clusters import (Accelerator, Cluster, F_PE, S_PE, NEON,
+from .clusters import (Accelerator, Cluster, F_PE, S_PE, NEON, arm_cost,
                        default_synergy_clusters, make_accelerators)
 from .scheduler import (SimLayer, SimNet, SimResult, simulate,
                         single_thread_latency, sf_layer_map, search_sc,
                         lpt_plan, rebalance)
 from .synergy_mm import SynergyTrace, synergy_matmul, current_trace
-from .pipeline import ThreadedPipeline, gpipe_reference, gpipe_spmd
+from .pipeline import (EngineStage, ThreadedPipeline, gpipe_reference,
+                       gpipe_spmd)
 from .im2col import im2col, conv2d_gemm, conv_out_shape

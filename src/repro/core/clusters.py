@@ -2,22 +2,17 @@
 
 The paper's prototype uses a fixed, network-agnostic accelerator set on the
 Zynq XC7Z020: 6 fast FPGA PEs (F-PE), 2 slow PEs (S-PE) and 2 NEON cores,
-grouped into clusters with private job queues.  We model each accelerator by
-a calibrated *rate* (sustained MAC/s on 32x32xk tile jobs) plus a per-job
-dispatch overhead (the ReconOS delegate-thread round trip).
+grouped into clusters with private job queues.
 
-Calibration (documented, used by the discrete-event simulator that reproduces
-the paper's Figures 9/13/14 and Table 6):
-
-  * F-PE: HLS loop pipelining at loop2, II limited by BRAM ports to TS/2=16
-    cycles per merged iteration -> ~2 MAC/cycle @ 100 MHz = 0.2 GMAC/s.
-  * S-PE: unroll(2) + pipelining at loop3 -> ~1 MAC/cycle = 0.1 GMAC/s (0.5x).
-  * NEON: calibrated from the paper's measurement that adding 2 NEONs to the
-    6F+2S FPGA config improves latency by ~12% (Fig 11): 2*x = 0.12*7.0
-    F-PE-units -> x = 0.42 F-PE-units = 0.084 GMAC/s.
-  * ARM A9 scalar (Darknet -O3): from Table 3, original single-thread design
-    sustains ~0.21 GOPS => ~0.105 GMAC/s on conv; other layers modeled at
-    0.5 Gop/s; im2col at 0.8 GB/s effective copy bandwidth.
+Each :class:`Accelerator` is a THIN VIEW over the engine registry
+(:mod:`repro.engines`): its kind names a registered simulated engine
+(``F-PE`` / ``S-PE`` / ``NEON`` / ``ARM``) whose :class:`CostModel` carries
+the calibrated rates — see ``repro.engines.sim`` for the calibration notes.
+Accelerator views read the registry LIVE — re-registering a kind's engine
+re-rates every accelerator, cluster, simulator run, and planner at once.
+The module-level rate constants are import-time snapshots kept only for
+backward compatibility; new code should go through ``Accelerator.cost`` /
+``arm_cost()``.
 
 At pod scale the same abstraction describes *device groups* of a TPU mesh
 (possibly heterogeneous across generations or degraded/straggler nodes); the
@@ -30,51 +25,95 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.engines import CostModel, find_engine, get_engine
+
 __all__ = [
     "Accelerator", "Cluster", "F_PE", "S_PE", "NEON",
-    "default_synergy_clusters", "make_accelerators", "CPU_CONV_MACS_PER_S",
-    "CPU_OTHER_OPS_PER_S", "CPU_COPY_BYTES_PER_S", "JOB_DISPATCH_S",
+    "default_synergy_clusters", "make_accelerators", "arm_cost",
+    "CPU_CONV_MACS_PER_S", "CPU_OTHER_OPS_PER_S", "CPU_COPY_BYTES_PER_S",
+    "JOB_DISPATCH_S", "F_PE_MACS_PER_S",
 ]
 
-# --- calibrated constants (see module docstring) ---------------------------
-# F-PE sustained rate: ~2 MAC/cycle pipelined minus BRAM-port stalls and
-# job-fetch gaps -> 0.125 GMAC/s.  Together with the ARM rate below this
-# centers the simulator on the paper's absolutes: ~7.3x mean speedup (Fig 9),
-# 39.5-136.4 fps band (Table 4), SF util ~92.5% (Table 6).
-F_PE_MACS_PER_S = 0.125e9
-JOB_DISPATCH_S = 30e-6          # delegate-thread round trip per job
-CPU_CONV_MACS_PER_S = 0.14e9    # ARM A9, Darknet gemm -O3, single thread
-CPU_OTHER_OPS_PER_S = 0.5e9     # pool/act/fc elementwise+gemv rate
-CPU_COPY_BYTES_PER_S = 0.8e9    # im2col / layout transforms
+
+def arm_cost() -> CostModel:
+    """The host-CPU cost model (im2col / pooling / act / fc stages)."""
+    return get_engine("ARM").cost
+
+
+def _kind_cost(kind: str) -> CostModel:
+    return get_engine(kind).cost
+
+
+# --- registry-derived aliases (the single source is repro.engines.sim) -----
+F_PE_MACS_PER_S = _kind_cost("F-PE").macs_per_s
+JOB_DISPATCH_S = _kind_cost("F-PE").dispatch_s
+CPU_CONV_MACS_PER_S = arm_cost().macs_per_s
+CPU_OTHER_OPS_PER_S = arm_cost().ops_per_s
+CPU_COPY_BYTES_PER_S = arm_cost().bytes_per_s
+
+
+def _rel_rate(kind: str) -> float:
+    """Registered kind rate expressed in F-PE units (live registry read)."""
+    eng, base = find_engine(kind), find_engine("F-PE")
+    if eng is None or base is None:
+        return 1.0
+    return eng.cost.macs_per_s / base.cost.macs_per_s
 
 
 @dataclasses.dataclass(frozen=True)
 class Accelerator:
-    """One PE/NEON: ``rate`` in F-PE units (F-PE == 1.0)."""
+    """One PE/NEON — a THIN VIEW over the engine registry.
+
+    ``rate`` (F-PE units; F-PE == 1.0) and ``dispatch_s`` default to None,
+    meaning "track the registered engine of my ``kind`` live" — so
+    re-registering a kind's engine re-rates every existing Accelerator,
+    cluster, and planner at once.  Explicit values pin a custom rate
+    (degraded nodes, hypothetical hardware)."""
 
     name: str
-    kind: str          # 'F-PE' | 'S-PE' | 'NEON' | 'TPU-slice'
-    rate: float        # relative to F-PE
-    dispatch_s: float = JOB_DISPATCH_S
+    kind: str          # 'F-PE' | 'S-PE' | 'NEON' | 'TPU-slice' | engine name
+    rate: float | None = None        # relative to F-PE; None = registry
+    dispatch_s: float | None = None  # None = kind engine's dispatch
+
+    @property
+    def rel_rate(self) -> float:
+        """Throughput in F-PE units (LPT planner / steal-guard metric)."""
+        return self.rate if self.rate is not None else _rel_rate(self.kind)
+
+    @property
+    def cost(self) -> CostModel:
+        """This accelerator's cost model view over the registry."""
+        eng = find_engine(self.kind)
+        if self.rate is None and eng is not None:
+            base = eng.cost
+        else:
+            fpe = find_engine("F-PE")
+            per_fpe = fpe.cost.macs_per_s if fpe is not None else F_PE_MACS_PER_S
+            base = CostModel(macs_per_s=self.rel_rate * per_fpe,
+                             dispatch_s=(eng.cost.dispatch_s if eng is not None
+                                         else JOB_DISPATCH_S))
+        if self.dispatch_s is not None:
+            base = dataclasses.replace(base, dispatch_s=self.dispatch_s)
+        return base
 
     @property
     def macs_per_s(self) -> float:
-        return self.rate * F_PE_MACS_PER_S
+        return self.cost.macs_per_s
 
     def job_time(self, job_macs: int) -> float:
-        return job_macs / self.macs_per_s + self.dispatch_s
+        return self.cost.job_time(job_macs)
 
 
 def F_PE(i: int) -> Accelerator:
-    return Accelerator(f"F-PE{i}", "F-PE", 1.0)
+    return Accelerator(f"F-PE{i}", "F-PE")
 
 
 def S_PE(i: int) -> Accelerator:
-    return Accelerator(f"S-PE{i}", "S-PE", 0.5)
+    return Accelerator(f"S-PE{i}", "S-PE")
 
 
 def NEON(i: int) -> Accelerator:
-    return Accelerator(f"NEON{i}", "NEON", 0.42)
+    return Accelerator(f"NEON{i}", "NEON")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +126,7 @@ class Cluster:
     @property
     def throughput(self) -> float:
         """Aggregate rate in F-PE units (used by the LPT planner)."""
-        return sum(a.rate for a in self.accelerators)
+        return sum(a.rel_rate for a in self.accelerators)
 
     def __len__(self) -> int:
         return len(self.accelerators)

@@ -20,12 +20,13 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ThreadedPipeline", "StageStats", "gpipe_reference", "gpipe_spmd"]
+__all__ = ["ThreadedPipeline", "EngineStage", "StageStats",
+           "gpipe_reference", "gpipe_spmd"]
 
 
 # ---------------------------------------------------------------------------
@@ -37,6 +38,46 @@ class StageStats:
     name: str
     busy_s: float = 0.0
     frames: int = 0
+    engine: Optional[str] = None
+
+
+@dataclasses.dataclass
+class EngineStage:
+    """A pipeline stage bound to the engine registry.
+
+    ``fn`` processes one frame's payload; ``engine`` (optional) pins the
+    stage's GEMMs to a registered engine — the worker runs ``fn`` under
+    ``repro.engines.engine_scope``, so every ``synergy_matmul`` traced
+    inside routes there (already-jitted fns keep the routing of their
+    first trace), and the stage is attributed in the run stats.
+    :meth:`gemm` builds the common case — a stage that IS one dense GEMM —
+    directly on ``synergy_matmul``, so stage compute flows through the
+    same dispatch surface as everything else."""
+
+    name: str
+    fn: Callable[[Any], Any]
+    engine: Optional[str] = None
+
+    @classmethod
+    def gemm(cls, name: str, w, *, bias=None, activation=None,
+             tile=None, engine: Optional[str] = None) -> "EngineStage":
+        from .synergy_mm import DEFAULT_TILE, synergy_matmul
+        tile = tile if tile is not None else DEFAULT_TILE
+
+        def fn(a):
+            return synergy_matmul(a, w, bias=bias, activation=activation,
+                                  tile=tile, name=name, engine=engine)
+        return cls(name, fn, engine)
+
+    def __call__(self, payload):
+        return self.fn(payload)
+
+
+def _as_stage(spec: Union["EngineStage", tuple]) -> EngineStage:
+    if isinstance(spec, EngineStage):
+        return spec
+    name, fn = spec
+    return EngineStage(name, fn)
 
 
 _STOP = object()
@@ -45,19 +86,31 @@ _STOP = object()
 class ThreadedPipeline:
     """Producer/consumer layer pipeline (paper §3.1, Figure 2).
 
-    stages: list of (name, fn) — fn processes one frame's payload.
-    mailbox_capacity bounds frames in flight between adjacent stages.
+    stages: list of :class:`EngineStage` or (name, fn) tuples — fn
+    processes one frame's payload.  mailbox_capacity bounds frames in
+    flight between adjacent stages.
     """
 
-    def __init__(self, stages: Sequence[tuple[str, Callable[[Any], Any]]],
+    def __init__(self,
+                 stages: Sequence[Union[EngineStage,
+                                        tuple[str, Callable[[Any], Any]]]],
                  mailbox_capacity: int = 4):
-        self.stages = list(stages)
+        self.stages = [_as_stage(s) for s in stages]
         self.mailboxes = [queue.Queue(maxsize=mailbox_capacity)
                           for _ in range(len(self.stages) + 1)]
-        self.stats = [StageStats(name) for name, _ in self.stages]
+        self.stats = [StageStats(s.name, engine=s.engine)
+                      for s in self.stages]
 
     def _worker(self, idx: int) -> None:
-        name, fn = self.stages[idx]
+        from repro.engines import engine_scope
+        stage = self.stages[idx]
+        fn = stage.fn
+        if stage.engine is not None:
+            raw = fn
+
+            def fn(item):
+                with engine_scope(stage.engine):
+                    return raw(item)
         inbox, outbox = self.mailboxes[idx], self.mailboxes[idx + 1]
         st = self.stats[idx]
         while True:
@@ -97,6 +150,8 @@ class ThreadedPipeline:
             "wall_s": wall,
             "fps": len(outputs) / wall if wall > 0 else 0.0,
             "stage_utilization": util,
+            "stage_engines": {s.name: s.engine for s in self.stats
+                              if s.engine is not None},
         }
 
 

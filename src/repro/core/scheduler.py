@@ -14,10 +14,11 @@ Three scheduling policies from the paper (§3.1.3, §4.3):
 
 The simulator is event-driven and models: the two ARM cores as a shared CPU
 pool (im2col, pooling, activation, FC, normalization), per-cluster job
-queues, per-accelerator service times from the calibrated rates in
-``clusters.py``, bounded frames-in-flight (the mailbox pipeline of §3.1),
-and the stealing protocol.  It is also the planning oracle for the TPU
-between-step rebalancer (``lpt_plan`` / ``rebalance``).
+queues, per-accelerator service times from the engine cost models in the
+``repro.engines`` registry (each ``Accelerator`` is a thin view over its
+kind's registered engine), bounded frames-in-flight (the mailbox pipeline
+of §3.1), and the stealing protocol.  It is also the planning oracle for
+the TPU between-step rebalancer (``lpt_plan`` / ``rebalance``).
 """
 
 from __future__ import annotations
@@ -28,9 +29,8 @@ import itertools
 from collections import deque
 from typing import Callable, Sequence
 
-from .clusters import (Accelerator, Cluster, CPU_CONV_MACS_PER_S,
-                       CPU_COPY_BYTES_PER_S, CPU_OTHER_OPS_PER_S,
-                       cluster_partitions, default_synergy_clusters)
+from .clusters import (Accelerator, Cluster, arm_cost, cluster_partitions,
+                       default_synergy_clusters)
 from .job import Job, JobSet
 
 __all__ = [
@@ -54,9 +54,10 @@ class SimLayer:
     cpu_ops: int = 0               # cpu only: pooling/act/fc op count
 
     def cpu_time(self) -> float:
+        cpu = arm_cost()
         if self.kind == "conv":
-            return self.im2col_bytes / CPU_COPY_BYTES_PER_S
-        return self.cpu_ops / CPU_OTHER_OPS_PER_S
+            return self.im2col_bytes / cpu.bytes_per_s
+        return self.cpu_ops / cpu.ops_per_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,7 +191,7 @@ def simulate(net: SimNet,
             # final jobs — on the last job of a layer a 2.4x-slower engine
             # would become the straggler that stalls the whole frame.
             victim = max(range(len(queues)), key=lambda q: len(queues[q]))
-            if queues[victim] and (acc.rate >= 0.9
+            if queues[victim] and (acc.rel_rate >= 0.9
                                    or len(queues[victim]) > 2):
                 job = queues[victim].popleft()
         if job is None:
@@ -294,10 +295,11 @@ def simulate(net: SimNet,
 def single_thread_latency(net: SimNet) -> float:
     """Original Darknet: one ARM core does everything (paper's baseline)."""
     t = 0.0
+    cpu = arm_cost()
     for layer in net.layers:
         t += layer.cpu_time()
         if layer.kind == "conv":
-            t += layer.jobset.useful_macs / CPU_CONV_MACS_PER_S
+            t += layer.jobset.useful_macs / cpu.macs_per_s
     return t
 
 

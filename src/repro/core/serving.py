@@ -3,23 +3,43 @@ granularity.
 
 The paper's heterogeneous job mix maps directly onto LLM serving: PREFILL
 requests are large compute-bound tile-job sets, DECODE steps are small
-memory-bound jobs.  The engine keeps a fixed-slot decode batch (the
-"cluster") and, like the thief thread, fills idle capacity from the
-pending-request queue: when slots are free it runs a prefill (admits a
-request), otherwise it advances the whole batch one decode step.  The
-slot batch keeps shapes static (jit-friendly); finished requests free
-their slot immediately (inter-frame pipelining at token granularity).
+memory-bound jobs.  Both are expressed as engine job classes
+(:class:`PrefillJob` / :class:`DecodeJob`) whose :class:`JobSet` views feed
+the same :class:`~repro.engines.Dispatcher` every other GEMM in the
+framework uses, so per-step engine routing and busy-time accounting come
+from the shared registry cost models.
+
+The engine keeps a fixed-slot decode batch (the "cluster") and, like the
+thief thread, fills idle capacity from the pending-request queue: when
+slots are free it runs a prefill (admits a request), otherwise it advances
+the whole batch one decode step.  The slot batch keeps shapes static
+(jit-friendly); finished requests free their slot immediately (inter-frame
+pipelining at token granularity).
+
+Cache discipline (continuous batching): every step passes PER-SLOT
+positions to ``decode_step`` — a slot's K/V rows are written only at that
+slot's own position, and slots marked ``-1`` (idle, or bystanders during
+another request's prefill) are never written at all.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Request", "ServeStats", "SynergyServer"]
+from repro.engines import Dispatcher, Engine
+
+from .job import JobSet
+
+__all__ = ["Request", "PrefillJob", "DecodeJob", "ServeStats",
+           "SynergyServer"]
+
+#: tile for the serving-side job accounting (decode GEMMs are tiny; the
+#: paper-faithful TS=32 keeps their jobsets non-degenerate)
+_SERVE_TILE = 32
 
 
 @dataclasses.dataclass
@@ -30,12 +50,60 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
 
 
+# ---------------------------------------------------------------------------
+# Engine job classes: the prefill/decode split, dispatcher-visible
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrefillJob:
+    """Admit one request into a slot: a compute-bound tile-job set (the
+    prompt's full-sequence GEMMs)."""
+
+    rid: int
+    slot: int
+    n_tokens: int
+    d_model: int
+    n_layers: int
+
+    kind = "prefill"
+
+    def jobset(self) -> JobSet:
+        # per-request proxy GEMM: (prompt tokens x d_model) @ (d_model x
+        # ~4*d_model) per layer, folded into one JobSet (m scales with
+        # layers so estimates stay comparable across models)
+        return JobSet.for_gemm(self.rid, self.n_tokens * self.n_layers,
+                               4 * self.d_model, self.d_model, _SERVE_TILE,
+                               name=f"prefill/r{self.rid}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeJob:
+    """Advance every live slot one token: a small memory-bound job set."""
+
+    step: int
+    slots: tuple[int, ...]     # live slot indices this step serves
+    d_model: int
+    n_layers: int
+
+    kind = "decode"
+
+    def jobset(self) -> JobSet:
+        return JobSet.for_gemm(self.step, len(self.slots) * self.n_layers,
+                               4 * self.d_model, self.d_model, _SERVE_TILE,
+                               name=f"decode/s{self.step}")
+
+
 @dataclasses.dataclass
 class ServeStats:
     engine_steps: int = 0
     prefills: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
+    #: dispatcher accounting per job class: estimated engine-busy seconds
+    job_busy_s: dict = dataclasses.field(
+        default_factory=lambda: {"prefill": 0.0, "decode": 0.0})
+    #: job class -> engine name the dispatcher last routed it to
+    job_engine: dict = dataclasses.field(default_factory=dict)
 
     @property
     def slot_efficiency(self) -> float:
@@ -48,8 +116,9 @@ class SynergyServer:
     slots: decode batch size (static); max_len: cache depth."""
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 64,
-                 prefill_len: int = 16):
-        from repro.models import decode_step, init_cache, prefill
+                 prefill_len: int = 16,
+                 dispatcher: Optional[Dispatcher] = None):
+        from repro.models import decode_step, init_cache
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -60,8 +129,8 @@ class SynergyServer:
         self.slot_pos = [0] * slots
         self.pending: list[Request] = []
         self.stats = ServeStats()
+        self.dispatcher = dispatcher or Dispatcher()
 
-        self._prefill = jax.jit(lambda p, t: prefill(cfg, p, tokens=t))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
 
@@ -97,31 +166,67 @@ class SynergyServer:
         return self.stats
 
     # ------------------------------------------------------------ internals
+    def _account(self, job) -> Engine:
+        """Route the job class through the dispatcher; book busy time."""
+        js = job.jobset()
+        eng = self.dispatcher.select(js)
+        est = eng.estimate(js)
+        eng.telemetry.record(js, est)
+        self.stats.job_busy_s[job.kind] += est
+        self.stats.job_engine[job.kind] = eng.name
+        return eng
+
+    def _slot_positions(self) -> jnp.ndarray:
+        """(slots,) int32 of per-slot cache positions; -1 for empty slots."""
+        return jnp.array(
+            [self.slot_pos[i] if r is not None else -1
+             for i, r in enumerate(self.slot_req)], jnp.int32)
+
     def _do_prefill(self, req: Request, slot: int) -> None:
-        # the prompt's last-token logits seed the first generated token;
-        # its K/V enter the slot's cache region by replaying through the
-        # decode path (single jitted program per token keeps this example
-        # simple; a production prefill writes the cache in one pass)
+        # The prompt replays through the decode path one token at a time
+        # (single jitted program keeps this example simple; a production
+        # prefill writes the cache in one pass).  Positions are per-slot:
+        # ONLY the target slot's position is set, so live requests in other
+        # slots keep their KV cache entries untouched.
         toks = req.tokens[: self.prefill_len]
+        if toks.shape[0] == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        self._account(PrefillJob(req.rid, slot, int(toks.shape[0]),
+                                 self.cfg.d_model, self.cfg.n_layers))
+        # slot reuse: zero the slot's cache rows (every cache tensor —
+        # K/V and SSM states alike — carries batch at axis 1).  Attention
+        # masks stale K/V anyway; recurrent SSM state NEEDS the reset or a
+        # reused slot would continue the previous request's recurrence.
+        self.cache = jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
+            self.cache)
+        logits = None
         for i in range(toks.shape[0]):
-            tok = jnp.broadcast_to(toks[i], (self.slots, 1)).astype(jnp.int32)
+            tok = (jnp.zeros((self.slots, 1), jnp.int32)
+                   .at[slot, 0].set(toks[i].astype(jnp.int32)))
+            pos = jnp.full((self.slots,), -1, jnp.int32).at[slot].set(i)
             logits, self.cache = self._decode(
-                self.params, self.cache, tok, jnp.int32(i))
+                self.params, self.cache, tok, pos)
+        # the prompt's last-token logits seed the first generated token
         first = int(jnp.argmax(logits[slot, -1]))
         req.out.append(first)
         self.slot_req[slot] = req
-        self.slot_pos[slot] = toks.shape[0]
+        self.slot_pos[slot] = int(toks.shape[0])
         self.stats.prefills += 1
 
     def _do_decode(self) -> None:
+        live = tuple(i for i, r in enumerate(self.slot_req) if r is not None)
+        self._account(DecodeJob(self.stats.decode_steps, live,
+                                self.cfg.d_model, self.cfg.n_layers))
         toks = jnp.zeros((self.slots, 1), jnp.int32)
         for i, r in enumerate(self.slot_req):
             if r is not None and r.out:
                 toks = toks.at[i, 0].set(r.out[-1])
-        pos = max(p for r, p in zip(self.slot_req, self.slot_pos)
-                  if r is not None)
-        logits, self.cache = self._decode(self.params, self.cache, toks,
-                                          jnp.int32(pos))
+        # per-slot positions: each live slot reads/writes at ITS OWN index
+        # (a shared max(pos) would smear late-arriving requests' tokens
+        # into earlier requests' cache rows); empty slots are masked (-1)
+        pos = self._slot_positions()
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         self.stats.decode_steps += 1
         for i, r in enumerate(self.slot_req):
             if r is None:

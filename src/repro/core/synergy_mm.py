@@ -6,17 +6,22 @@ It does three things:
   1. Registers the GEMM's :class:`~repro.core.job.JobSet` with the active
      :class:`SynergyTrace` (trace-time metadata: the job decomposition the
      schedulers, cost model, and roofline analysis operate on).
-  2. Picks the execution engine: the Pallas ``tiled_mm`` kernel (TPU target;
-     validated in interpret mode on CPU) or the XLA dot (CPU dry-run path —
-     keeps the 512-device dry-run HLO clean and lets ``cost_analysis`` see
-     canonical dots).
-  3. Applies the fused epilogue (bias/activation) — a beyond-paper
-     optimization (the paper's PEs write raw C tiles; fusing the epilogue
-     removes one HBM round trip per GEMM).
+  2. Asks the :class:`~repro.engines.Dispatcher` for the best-capable
+     registered :class:`~repro.engines.Engine` (XLA dot on CPU dry-runs,
+     the Pallas ``tiled_mm`` kernel on TPU, or whatever the user
+     registered) and executes there.  The old ``impl='auto'|'xla'|'pallas'``
+     strings survive only as a deprecation shim over the engine lookup.
+  3. Records per-engine telemetry (jobs, estimated busy seconds, bytes
+     moved) on both the engine and the active trace.
 
 The job abstraction is exactly the paper's: one job == one output tile of C,
 zero-padded at borders so a single fixed-size engine serves every layer of
 every network ("network-agnostic accelerators").
+
+Telemetry semantics: ``synergy_matmul`` runs at JAX trace time, so counters
+advance once per traced GEMM (per compilation), mirroring what
+``SynergyTrace`` has always recorded — the static job decomposition, not
+per-step execution counts.
 """
 
 from __future__ import annotations
@@ -24,10 +29,13 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Callable, Optional
+import warnings
+from typing import Callable, Optional, Union
 
 import jax
-import jax.numpy as jnp
+
+from repro.engines import (Engine, Telemetry, current_scope_engine,
+                           dispatch_gemm)
 
 from .job import JobSet
 
@@ -39,12 +47,18 @@ DEFAULT_TILE = (256, 256, 256)
 
 _state = threading.local()
 
+#: deprecation shim: legacy ``impl`` strings -> registered engine names
+_IMPL_TO_ENGINE = {"auto": None, "xla": "xla", "pallas": "pallas"}
+
 
 @dataclasses.dataclass
 class SynergyTrace:
-    """Collects the JobSets of every GEMM traced under this context."""
+    """Collects the JobSets of every GEMM traced under this context, plus
+    the per-engine telemetry of where the dispatcher routed them."""
 
     jobsets: list[JobSet] = dataclasses.field(default_factory=list)
+    engine_stats: dict[str, Telemetry] = dataclasses.field(
+        default_factory=dict)
     _next_layer_id: int = 0
 
     def add(self, m: int, n: int, k: int, tile, name: str) -> JobSet:
@@ -52,6 +66,11 @@ class SynergyTrace:
         self._next_layer_id += 1
         self.jobsets.append(js)
         return js
+
+    def record_engine(self, engine_name: str, js: JobSet,
+                      est_s: float) -> None:
+        self.engine_stats.setdefault(engine_name, Telemetry()).record(js,
+                                                                      est_s)
 
     @property
     def total_flops(self) -> int:
@@ -75,12 +94,21 @@ def current_trace() -> Optional[SynergyTrace]:
     return getattr(_state, "trace", None)
 
 
-def _epilogue(y: jax.Array, bias, activation) -> jax.Array:
-    if bias is not None:
-        y = y + bias
-    if activation is not None:
-        y = activation(y)
-    return y
+def _resolve_impl_shim(impl: Optional[str],
+                       engine: Union[str, Engine, None]):
+    """Translate the legacy ``impl`` string into an engine lookup."""
+    if impl is None:
+        return engine
+    warnings.warn(
+        "synergy_matmul(impl=...) is deprecated; use engine=<registered "
+        "engine name> or let the dispatcher pick (repro.engines)",
+        DeprecationWarning, stacklevel=3)
+    if engine is not None:
+        return engine          # explicit engine wins over the legacy string
+    try:
+        return _IMPL_TO_ENGINE[impl]
+    except KeyError:
+        return impl            # maybe a registered engine name already
 
 
 def synergy_matmul(a: jax.Array, b: jax.Array, *,
@@ -88,39 +116,39 @@ def synergy_matmul(a: jax.Array, b: jax.Array, *,
                    activation: Callable | None = None,
                    tile: tuple[int, int, int] | int = DEFAULT_TILE,
                    name: str = "",
-                   impl: str = "auto",
+                   engine: Union[str, Engine, None] = None,
+                   impl: str | None = None,
                    out_dtype=None,
                    precision=None) -> jax.Array:
     """C = act(A @ B + bias) through the Synergy tile-job abstraction.
 
-    a: (..., m, k); b: (k, n).  ``impl``: 'auto' | 'xla' | 'pallas'.
+    a: (..., m, k); b: (k, n).  ``engine``: a registered engine name (or
+    instance); None lets the dispatcher rank capable engines by cost model.
+    ``impl`` is the deprecated string spelling of the same choice.
     """
     *lead, m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    engine = _resolve_impl_shim(impl, engine)
+    if engine is None:
+        engine = current_scope_engine()   # engine_scope() pin, if any
+
+    batch = 1
+    for d in lead:
+        batch *= d
     tr = current_trace()
     if tr is not None:
-        batch = 1
-        for d in lead:
-            batch *= d
-        tr.add(batch * m, n, k, tile, name=name or "gemm")
+        js = tr.add(batch * m, n, k, tile, name=name or "gemm")
+    else:
+        js = JobSet.for_gemm(0, batch * m, n, k, tile, name=name or "gemm")
 
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "pallas":
-        from repro.kernels.tiled_mm import ops as tiled_ops
-        a2 = a.reshape(-1, k)
-        y = tiled_ops.tiled_matmul(a2, b, tile=tile, bias=bias,
-                                   activation=activation,
-                                   out_dtype=out_dtype)
-        return y.reshape(*lead, m, n)
-    if b.dtype != a.dtype:
-        # storage dtype != compute dtype (e.g. int8 weight-only quant for
-        # decode, §Perf B1): dequant-on-read, accumulate in f32
-        b = b.astype(a.dtype)
-    y = jax.lax.dot_general(
-        a, b, (((a.ndim - 1,), (0,)), ((), ())),
-        precision=precision,
-        preferred_element_type=jnp.float32)
-    y = _epilogue(y, bias, activation)
-    return y.astype(out_dtype or a.dtype)
+    eng = dispatch_gemm(js, engine=engine)
+    est_s = eng.estimate(js)
+    eng.telemetry.record(js, est_s)
+    if tr is not None:
+        tr.record_engine(eng.name, js, est_s)
+
+    a2 = a.reshape(-1, k)
+    y = eng.execute(a2, b, bias=bias, activation=activation, tile=tile,
+                    out_dtype=out_dtype, precision=precision)
+    return y.reshape(*lead, m, n)

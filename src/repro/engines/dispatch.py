@@ -1,0 +1,92 @@
+"""The Dispatcher: route each GEMM's JobSet to the best-capable engine.
+
+The dispatch rule is the paper's scheduling insight at engine granularity:
+filter by capability, rank by the shared cost model, run on the winner.
+``synergy_matmul`` consults the default dispatcher for every dense GEMM in
+the framework, so registering a faster engine reroutes all work with zero
+call-site edits.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterable, Iterator, Optional, Union
+
+from .base import CAP_GEMM, CAP_SIM, Engine
+from .registry import get_engine, list_engines
+
+__all__ = ["Dispatcher", "DEFAULT_DISPATCHER", "dispatch_gemm",
+           "engine_scope", "current_scope_engine"]
+
+_scope = threading.local()
+
+
+@contextlib.contextmanager
+def engine_scope(engine: Union[str, Engine, None]) -> Iterator[None]:
+    """Pin every auto-dispatched GEMM in this thread to ``engine`` for the
+    duration of the block (trace-time routing: code already jit-compiled
+    outside the scope keeps its original routing).  ``None`` restores
+    dispatcher auto-selection; scopes nest."""
+    prev = getattr(_scope, "engine", None)
+    _scope.engine = engine
+    try:
+        yield
+    finally:
+        _scope.engine = prev
+
+
+def current_scope_engine() -> Union[str, Engine, None]:
+    return getattr(_scope, "engine", None)
+
+
+class Dispatcher:
+    """Capability-filtered, cost-ranked engine selection.
+
+    ``require``: capabilities every candidate must advertise.
+    ``exclude``: capabilities that disqualify a candidate from AUTO
+    selection (simulated PEs by default — they model a 0.1 GMAC/s Zynq
+    fabric and would never win, but excluding them keeps auto-dispatch
+    semantics independent of what simulators are registered).
+    """
+
+    def __init__(self, require: Iterable[str] = (CAP_GEMM,),
+                 exclude: Iterable[str] = (CAP_SIM,)):
+        self.require = frozenset(require)
+        self.exclude = frozenset(exclude)
+
+    def candidates(self, require: Iterable[str] = ()) -> list[Engine]:
+        req = self.require | frozenset(require)
+        return [e for e in list_engines()
+                if e.supports(req) and not (e.capabilities & self.exclude)
+                and e.available()]
+
+    def select(self, jobset, *, engine: Union[str, Engine, None] = None,
+               require: Iterable[str] = ()) -> Engine:
+        """Pick the engine for one JobSet.
+
+        An explicit ``engine`` (name or instance) bypasses ranking but is
+        still capability-checked; otherwise the cheapest capable candidate
+        by cost-model estimate wins."""
+        req = self.require | frozenset(require)
+        if engine is not None:
+            eng = get_engine(engine) if isinstance(engine, str) else engine
+            if not eng.supports(req):
+                missing = sorted(req - eng.capabilities)
+                raise ValueError(f"engine {eng.name!r} lacks required "
+                                 f"capabilities {missing}")
+            return eng
+        cands = self.candidates(require)
+        if not cands:
+            raise RuntimeError(
+                f"no registered engine satisfies capabilities {sorted(req)}")
+        return min(cands, key=lambda e: e.estimate(jobset))
+
+
+DEFAULT_DISPATCHER = Dispatcher()
+
+
+def dispatch_gemm(jobset, *, engine: Union[str, Engine, None] = None,
+                  require: Iterable[str] = ()) -> Engine:
+    """Module-level shorthand for ``DEFAULT_DISPATCHER.select``."""
+    return DEFAULT_DISPATCHER.select(jobset, engine=engine, require=require)

@@ -1,0 +1,154 @@
+"""Process-wide engine registry + per-op variant registry.
+
+Two registries back the unified dispatch surface:
+
+  * **Engine registry** — named :class:`~repro.engines.base.Engine` objects
+    (GEMM backends + simulated paper PEs).  ``register_engine`` is the ONE
+    call needed to bring a new backend online: the dispatcher, the
+    schedulers and every ``synergy_matmul`` call site pick it up with zero
+    edits.
+  * **Op-variant registry** — named implementations of non-GEMM kernels
+    (flash attention, SSD scan, attention scores).  ``resolve_op`` replaces
+    the old string-compare ``impl`` branching: variants carry a priority
+    and an availability predicate, and ``"auto"`` resolves to the
+    highest-priority variant available on the current backend.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Callable, Iterator, Optional
+
+from .base import Engine
+
+__all__ = [
+    "register_engine", "unregister_engine", "get_engine", "find_engine",
+    "list_engines", "registered",
+    "OpVariant", "register_op_impl", "resolve_op", "op_variants",
+]
+
+_LOCK = threading.RLock()
+_ENGINES: dict[str, Engine] = {}
+
+
+# ---------------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------------
+
+def register_engine(engine: Engine, *, override: bool = False) -> Engine:
+    """Register ``engine`` under ``engine.name``; returns it for chaining."""
+    with _LOCK:
+        if engine.name in _ENGINES and not override:
+            raise ValueError(
+                f"engine {engine.name!r} already registered "
+                f"({_ENGINES[engine.name]!r}); pass override=True to replace")
+        _ENGINES[engine.name] = engine
+    return engine
+
+
+def unregister_engine(name: str) -> Optional[Engine]:
+    with _LOCK:
+        return _ENGINES.pop(name, None)
+
+
+def get_engine(name: str) -> Engine:
+    with _LOCK:
+        try:
+            return _ENGINES[name]
+        except KeyError:
+            known = sorted(_ENGINES)
+            raise KeyError(f"no engine {name!r}; registered: {known}") from None
+
+
+def find_engine(name: str) -> Optional[Engine]:
+    with _LOCK:
+        return _ENGINES.get(name)
+
+
+def list_engines() -> list[Engine]:
+    with _LOCK:
+        return list(_ENGINES.values())
+
+
+@contextlib.contextmanager
+def registered(*engines: Engine) -> Iterator[tuple[Engine, ...]]:
+    """Temporarily register engines (tests / scoped experiments), restoring
+    any same-named engines they shadowed on exit."""
+    shadowed: dict[str, Optional[Engine]] = {}
+    with _LOCK:
+        for e in engines:
+            shadowed[e.name] = _ENGINES.get(e.name)
+            _ENGINES[e.name] = e
+    try:
+        yield engines
+    finally:
+        with _LOCK:
+            for name, prev in shadowed.items():
+                if prev is None:
+                    _ENGINES.pop(name, None)
+                else:
+                    _ENGINES[name] = prev
+
+
+# ---------------------------------------------------------------------------
+# Op-variant registry (non-GEMM kernels)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpVariant:
+    """One named implementation of an op family.
+
+    ``priority`` ranks variants for ``"auto"`` resolution (higher wins);
+    ``available`` gates auto-selection (an explicitly named variant always
+    resolves — e.g. Pallas interpret mode off-TPU)."""
+
+    op: str
+    name: str
+    fn: Callable
+    priority: int = 0
+    available: Callable[[], bool] = lambda: True
+
+
+_OPS: dict[str, dict[str, OpVariant]] = {}
+
+
+def register_op_impl(op: str, name: str, fn: Callable, *, priority: int = 0,
+                     available: Callable[[], bool] | None = None,
+                     override: bool = False) -> OpVariant:
+    variant = OpVariant(op, name, fn, priority,
+                        available if available is not None else (lambda: True))
+    with _LOCK:
+        table = _OPS.setdefault(op, {})
+        if name in table and not override:
+            raise ValueError(f"variant {name!r} of op {op!r} already "
+                             f"registered; pass override=True to replace")
+        table[name] = variant
+    return variant
+
+
+def op_variants(op: str) -> list[OpVariant]:
+    with _LOCK:
+        return sorted(_OPS.get(op, {}).values(), key=lambda v: -v.priority)
+
+
+def resolve_op(op: str, name: str = "auto") -> Callable:
+    """Resolve an op implementation.  ``"auto"`` picks the highest-priority
+    variant whose ``available()`` is true; an explicit name always resolves
+    (KeyError if unknown)."""
+    with _LOCK:
+        table = _OPS.get(op)
+        if not table:
+            raise KeyError(f"no variants registered for op {op!r}")
+        if name != "auto":
+            try:
+                return table[name].fn
+            except KeyError:
+                raise KeyError(f"op {op!r} has no variant {name!r}; "
+                               f"known: {sorted(table)}") from None
+        ranked = sorted(table.values(), key=lambda v: (-v.priority, v.name))
+    for v in ranked:
+        if v.available():
+            return v.fn
+    raise RuntimeError(f"no available variant for op {op!r} on this backend")

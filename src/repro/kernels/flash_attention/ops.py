@@ -1,16 +1,38 @@
-"""Jit'd flash-attention wrapper with engine dispatch + shape handling."""
+"""Jit'd flash-attention wrapper dispatched through the op-variant
+registry (:mod:`repro.engines`): variants ``pallas`` (TPU target;
+interpret off-TPU when named explicitly) and ``xla`` (jnp reference — the
+dry-run path so HLO stays canonical).  ``auto`` resolves to the
+highest-priority variant available on the current backend."""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
+
+from repro.engines import register_op_impl, resolve_op
 
 from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
 
 __all__ = ["flash_attention"]
+
+
+def _xla_variant(q, k, v, *, causal, scale, blk_q, blk_k):
+    return attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def _pallas_variant(q, k, v, *, causal, scale, blk_q, blk_k):
+    s, sk = q.shape[2], k.shape[2]
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale,
+        blk_q=min(blk_q, s), blk_k=min(blk_k, sk),
+        interpret=jax.default_backend() != "tpu")
+
+
+register_op_impl("flash_attention", "xla", _xla_variant, priority=0)
+register_op_impl("flash_attention", "pallas", _pallas_variant, priority=10,
+                 available=lambda: jax.default_backend() == "tpu")
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "blk_q",
@@ -23,16 +45,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     impl: str = "auto") -> jax.Array:
     """q (B, Hq, S, D); k/v (B, Hkv, Sk, D) -> (B, Hq, S, D).
 
-    impl: 'pallas' (TPU target; interpret on CPU), 'xla' (jnp reference —
-    the dry-run path so HLO stays canonical), or 'auto'.
+    impl: a registered ``flash_attention`` variant name, or 'auto'.
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "xla":
-        return attention_ref(q, k, v, causal=causal, scale=scale)
-    s, sk = q.shape[2], k.shape[2]
-    bq = min(blk_q, s)
-    bk = min(blk_k, sk)
-    return flash_attention_pallas(
-        q, k, v, causal=causal, scale=scale, blk_q=bq, blk_k=bk,
-        interpret=jax.default_backend() != "tpu")
+    fn = resolve_op("flash_attention", impl)
+    return fn(q, k, v, causal=causal, scale=scale, blk_q=blk_q, blk_k=blk_k)

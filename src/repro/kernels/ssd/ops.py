@@ -1,6 +1,7 @@
-"""Jit'd SSD wrapper: pre-scaling, engine dispatch, and the chunked XLA
-path (same math as the kernel, expressed with lax.scan over chunks — this
-is what the 512-device dry-run lowers so the HLO stays canonical)."""
+"""Jit'd SSD wrapper: pre-scaling, op-variant dispatch via the
+``repro.engines`` registry, and the chunked XLA path (same math as the
+kernel, expressed with lax.scan over chunks — this is what the 512-device
+dry-run lowers so the HLO stays canonical)."""
 
 from __future__ import annotations
 
@@ -8,6 +9,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.engines import register_op_impl, resolve_op
 
 from .ssd import ssd_pallas
 from .ref import ssd_ref
@@ -74,6 +77,23 @@ def ssd_chunked_xla(xdt, dta, bm, cm, *, chunk: int = 128):
     return y, s_fin
 
 
+register_op_impl(
+    "ssd", "pallas",
+    lambda xdt, dta, bm, cm, *, chunk: ssd_pallas(
+        xdt, dta, bm, cm, chunk=chunk,
+        interpret=jax.default_backend() != "tpu"),
+    priority=10, available=lambda: jax.default_backend() == "tpu")
+register_op_impl(
+    "ssd", "xla",
+    lambda xdt, dta, bm, cm, *, chunk: ssd_chunked_xla(
+        xdt, dta, bm, cm, chunk=chunk),
+    priority=0)
+register_op_impl(
+    "ssd", "ref",
+    lambda xdt, dta, bm, cm, *, chunk: ssd_ref(xdt, dta, bm, cm),
+    priority=-10)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))
 def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
         cm: jax.Array, *, chunk: int = 128,
@@ -91,14 +111,6 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
                                  + [(0, 0)] * (t.ndim - 2))
         x, dt, bm, cm = padl(x), padl(dt), padl(bm), padl(cm)
     xdt, dta = _prescale(x, dt, a)
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "pallas":
-        y, s = ssd_pallas(xdt, dta, bm, cm, chunk=chunk,
-                          interpret=jax.default_backend() != "tpu")
-    elif impl == "xla":
-        y, s = ssd_chunked_xla(xdt, dta, bm, cm, chunk=chunk)
-    else:  # 'ref'
-        y, s = ssd_ref(xdt, dta, bm, cm)
+    y, s = resolve_op("ssd", impl)(xdt, dta, bm, cm, chunk=chunk)
     y = jnp.swapaxes(y, 1, 2)
     return (y[:, :l_orig] if pad else y), s

@@ -1,5 +1,8 @@
 """Jit'd wrapper for the tiled_mm Pallas kernel: border zero-padding
-(paper §3.2.1 "Zero Padding in mm_tile") and engine dispatch."""
+(paper §3.2.1 "Zero Padding in mm_tile").  This is the execution backend
+of :class:`repro.engines.PallasTiledEngine`; call sites dispatch through
+``synergy_matmul`` / the engine registry rather than importing this
+directly."""
 
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
-"""Attention: GQA projections (Synergy GEMM jobs) + three score engines.
+"""Attention: GQA projections (Synergy GEMM jobs) + three score engines,
+registered as ``attention_scores`` op variants in :mod:`repro.engines`:
 
-Engines:
   * 'pallas'    — the flash-attention Pallas kernel (TPU target).
   * 'flash_xla' — the same online-softmax tiling expressed as a double
                   lax.scan over (q-block, kv-block).  This is what the
@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.synergy_mm import synergy_matmul
+from repro.engines import register_op_impl, resolve_op
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from .layers import init_dense, rope
 
@@ -154,15 +155,26 @@ def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, hq, s, d)[:, :, :s_orig, :]
 
 
+register_op_impl(
+    "attention_scores", "pallas",
+    lambda q, k, v, *, causal, blk_q, blk_k: flash_attention(
+        q, k, v, causal=causal, impl="pallas"),
+    priority=10, available=lambda: jax.default_backend() == "tpu")
+register_op_impl(
+    "attention_scores", "flash_xla",
+    lambda q, k, v, *, causal, blk_q, blk_k: flash_attention_xla(
+        q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k),
+    priority=0)
+register_op_impl(
+    "attention_scores", "ref",
+    lambda q, k, v, *, causal, blk_q, blk_k: attention_ref(
+        q, k, v, causal=causal),
+    priority=-10)
+
+
 def _scores_engine(q, k, v, *, causal, impl, blk_q=512, blk_k=1024):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "flash_xla"
-    if impl == "pallas":
-        return flash_attention(q, k, v, causal=causal, impl="pallas")
-    if impl == "flash_xla":
-        return flash_attention_xla(q, k, v, causal=causal,
-                                   blk_q=blk_q, blk_k=blk_k)
-    return attention_ref(q, k, v, causal=causal)
+    return resolve_op("attention_scores", impl)(q, k, v, causal=causal,
+                                                blk_q=blk_q, blk_k=blk_k)
 
 
 def attention(params: dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
@@ -214,18 +226,39 @@ def project_kv(params: dict, src: jax.Array, *, n_kv_heads: int,
     return kk, vv
 
 
+def _rope_positions(pos: jax.Array, b: int) -> jax.Array:
+    """Broadcastable rope positions for one decode token: scalar ``pos`` ->
+    (1, 1, 1); per-slot vector (B,) -> (B, 1, 1).  Negative entries mark
+    inactive slots (continuous batching) and are clamped — their output is
+    discarded and their cache writes masked."""
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        return jnp.full((1, 1, 1), p)
+    return jnp.maximum(p, 0).reshape(b, 1, 1)
+
+
+def _cache_valid_mask(pos: jax.Array, s_max: int) -> jax.Array:
+    """(..., s_max) attention mask over cache positions for scalar or
+    per-slot (B,) ``pos``."""
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        return (jnp.arange(s_max) <= p)[None, None, None, None, :]
+    return (jnp.arange(s_max)[None, :]
+            <= jnp.maximum(p, 0)[:, None])[:, None, None, None, :]
+
+
 def decode_project_kv(params: dict, x: jax.Array, pos: jax.Array, *,
                       n_kv_heads: int, head_dim: int,
                       rope_theta: float = 1e4, use_rope: bool = True):
     """Project the new token's K/V -> (B, Hkv, 1, hd) each (for in-place
-    cache insertion — §Perf D1)."""
+    cache insertion — §Perf D1).  ``pos``: scalar or per-slot (B,)."""
     b = x.shape[0]
     kk = synergy_matmul(x, params["wk"], name="attn/wk")
     vv = synergy_matmul(x, params["wv"], name="attn/wv")
     kk = kk.reshape(b, 1, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
     vv = vv.reshape(b, 1, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
     if use_rope:
-        kk = rope(kk, jnp.full((1, 1, 1), pos), rope_theta)
+        kk = rope(kk, _rope_positions(pos, b), rope_theta)
     return kk, vv
 
 
@@ -234,21 +267,22 @@ def decode_attend(params: dict, x: jax.Array, k_cache: jax.Array,
                   n_kv_heads: int, head_dim: int, rope_theta: float = 1e4,
                   use_rope: bool = True, name: str = "attn") -> jax.Array:
     """One-token attention against a READ-ONLY cache slice (the new
-    token's K/V must already be inserted).  x (B,1,d) -> (B,1,d)."""
+    token's K/V must already be inserted).  x (B,1,d) -> (B,1,d).
+    ``pos``: scalar, or per-slot (B,) vector (continuous batching — each
+    slot attends only to its own prefix)."""
     b = x.shape[0]
     g = n_heads // n_kv_heads
     s_max = k_cache.shape[2]
     q = synergy_matmul(x, params["wq"], name=f"{name}/wq")
     q = q.reshape(b, 1, n_heads, head_dim).transpose(0, 2, 1, 3)
     if use_rope:
-        q = rope(q, jnp.full((1, 1, 1), pos), rope_theta)
+        q = rope(q, _rope_positions(pos, b), rope_theta)
     qg = q.reshape(b, n_kv_heads, g, 1, head_dim)
     # read the cache at its STORAGE dtype; f32 happens in the MXU
     # accumulator (an astype here materializes an f32 copy of the cache)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(k_cache.dtype), k_cache,
                    preferred_element_type=jnp.float32) / math.sqrt(head_dim)
-    valid = jnp.arange(s_max) <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    s = jnp.where(_cache_valid_mask(pos, s_max), s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)

@@ -84,25 +84,31 @@ def init_cnn(cfg: CNNConfig, key: jax.Array, dtype=jnp.float32) -> dict:
     return params
 
 
-def _conv_via_jobs(x, w, b, stride, pad, tile, name):
+def _conv_via_jobs(x, w, b, stride, pad, tile, name, engine=None):
     """CONV -> im2col -> synergy_matmul (tile jobs) -> bias+relu epilogue."""
     kh, kw, cin, cout = w.shape
     n, h, wd, _ = x.shape
     oh, ow = conv_out_shape(h, wd, kh, kw, stride, pad)
     a = im2col(x, kh, kw, stride, pad).reshape(n * oh * ow, kh * kw * cin)
     y = synergy_matmul(a, w.reshape(-1, cout), bias=b,
-                       activation=jax.nn.relu, tile=tile, name=name)
+                       activation=jax.nn.relu, tile=tile, name=name,
+                       engine=engine)
     return y.reshape(n, oh, ow, cout)
 
 
-def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array) -> jax.Array:
-    """x: (N, H, W, Cin) -> logits (N, num_classes)."""
+def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
+                engine: str | None = None) -> jax.Array:
+    """x: (N, H, W, Cin) -> logits (N, num_classes).
+
+    ``engine``: pin every GEMM to a registered engine; None lets the
+    dispatcher rank capable engines per GEMM (the default)."""
     shapes, _ = cfg.trace_shapes()
     for i, (spec, *_rest) in enumerate(shapes):
         if spec[0] == "conv":
             _, cout, k, s, p = spec
             x = _conv_via_jobs(x, params[f"conv{i}_w"], params[f"conv{i}_b"],
-                               s, p, cfg.tile, f"{cfg.name}/conv{i}")
+                               s, p, cfg.tile, f"{cfg.name}/conv{i}",
+                               engine=engine)
         elif spec[0] == "pool":
             size = spec[1]
             n, h, w, c = x.shape
@@ -115,7 +121,7 @@ def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array) -> jax.Array:
             act = None if last else jax.nn.relu
             x = synergy_matmul(x, params[f"fc{i}_w"], bias=params[f"fc{i}_b"],
                                activation=act, tile=cfg.tile,
-                               name=f"{cfg.name}/fc{i}")
+                               name=f"{cfg.name}/fc{i}", engine=engine)
     return x
 
 

@@ -315,13 +315,38 @@ def _layer_slice(tree, l):
 def _write_token_kv(K, V, kk, vv, l, pos):
     """§Perf D1: in-place token-slice insert into the global (L,B,H,S,hd)
     caches — a scan-ys formulation rewrites the ENTIRE cache every decode
-    step (measured 10-20x the minimal decode traffic)."""
-    zero = jnp.int32(0)
-    K = jax.lax.dynamic_update_slice(K, kk[None].astype(K.dtype),
-                                     (l, zero, zero, pos, zero))
-    V = jax.lax.dynamic_update_slice(V, vv[None].astype(V.dtype),
-                                     (l, zero, zero, pos, zero))
-    return K, V
+    step (measured 10-20x the minimal decode traffic).
+
+    ``pos`` scalar: every batch row writes at the same position.
+    ``pos`` (B,) vector: each slot writes at ITS OWN position; rows with
+    ``pos < 0`` are skipped entirely (inactive / non-target slots — the
+    continuous-batching server relies on this to keep live requests' cache
+    entries untouched during another request's prefill)."""
+    if jnp.ndim(pos) == 0:
+        zero = jnp.int32(0)
+        K = jax.lax.dynamic_update_slice(K, kk[None].astype(K.dtype),
+                                         (l, zero, zero, pos, zero))
+        V = jax.lax.dynamic_update_slice(V, vv[None].astype(V.dtype),
+                                         (l, zero, zero, pos, zero))
+        return K, V
+
+    def write(full, new):
+        layer = jax.lax.dynamic_index_in_dim(full, l, 0, keepdims=False)
+
+        def one_row(row, tok, p):        # row (H,S,hd); tok (H,1,hd)
+            # masked rows re-write their CURRENT slice (token-sized no-op)
+            # instead of selecting over the whole layer — keeps the D1
+            # token-slice traffic profile for the vector-pos path too
+            p0 = jnp.maximum(p, 0)
+            cur = jax.lax.dynamic_slice(
+                row, (0, p0, 0), (row.shape[0], 1, row.shape[2]))
+            tok = jnp.where(p >= 0, tok.astype(row.dtype), cur)
+            return jax.lax.dynamic_update_slice(row, tok, (0, p0, 0))
+
+        layer = jax.vmap(one_row)(layer, new, pos)
+        return jax.lax.dynamic_update_index_in_dim(full, layer, l, 0)
+
+    return write(K, kk), write(V, vv)
 
 
 def _decode_attn_block_inplace(cfg, p, x, K, V, l, pos, xk=None, xv=None):
@@ -351,14 +376,25 @@ def _decode_attn_block_inplace(cfg, p, x, K, V, l, pos, xk=None, xv=None):
     return x, K, V
 
 
-def _decode_mamba_inplace(cfg, p, x, mcache, l):
-    """Mamba block with in-place state update into the stacked caches."""
+def _decode_mamba_inplace(cfg, p, x, mcache, l, pos=None):
+    """Mamba block with in-place state update into the stacked caches.
+
+    Per-slot ``pos`` (B,) vectors mask the recurrent-state update the same
+    way ``_write_token_kv`` masks K/V: rows with ``pos < 0`` keep their
+    state untouched (bystander slots during another request's prefill)."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    st = _layer_slice(mcache, l)
-    y, st = mamba2_decode_step(p["mixer"], h, st, d_inner=cfg.d_inner,
+    st_old = _layer_slice(mcache, l)
+    y, st = mamba2_decode_step(p["mixer"], h, st_old, d_inner=cfg.d_inner,
                                ssm_state=cfg.ssm_state,
                                head_dim=cfg.ssm_head_dim,
                                eps=cfg.norm_eps)
+    if pos is not None and jnp.ndim(pos):
+        keep = pos >= 0
+        st = jax.tree.map(
+            lambda new, old: jnp.where(
+                keep.reshape((-1,) + (1,) * (old.ndim - 1)),
+                new.astype(old.dtype), old),
+            st, st_old)
     mcache = jax.tree.map(
         lambda full, new: jax.lax.dynamic_update_index_in_dim(
             full, new.astype(full.dtype), l, 0),
@@ -369,7 +405,10 @@ def _decode_mamba_inplace(cfg, p, x, mcache, l):
 def decode_step(cfg: ArchConfig, params: dict, cache: dict,
                 tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
     """One decode step.  tokens (B, 1) int32 (or (B, 1, d) embeds for
-    frontend archs); pos: scalar index into the cache.  Returns
+    frontend archs); pos: scalar cache index, OR a per-slot (B,) vector for
+    continuous batching — each slot reads/writes at its own position, and
+    slots with ``pos < 0`` are masked out of every cache write (their
+    logits are garbage and must be ignored).  Returns
     (logits (B, 1, V), new cache).
 
     §Perf D1: layers iterate via fori_loop carrying the GLOBAL caches and
@@ -393,7 +432,7 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict,
         def step(l, carry):
             h, mc = carry
             p = _layer_slice(params["blocks"], l)
-            h, mc = _decode_mamba_inplace(cfg, p, h, mc, l)
+            h, mc = _decode_mamba_inplace(cfg, p, h, mc, l, pos)
             return h, mc
         x, cache = jax.lax.fori_loop(0, cfg.n_layers, step, (x, cache))
     elif cfg.family == "hybrid":
@@ -408,7 +447,7 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict,
                 hh, mc2 = c2
                 l = g * per + i
                 p = _layer_slice(params["blocks"], l)
-                hh, mc2 = _decode_mamba_inplace(cfg, p, hh, mc2, l)
+                hh, mc2 = _decode_mamba_inplace(cfg, p, hh, mc2, l, pos)
                 return hh, mc2
             h, mc = jax.lax.fori_loop(0, per, inner, (h, mc))
             h, K, V = _decode_attn_block_inplace(cfg, shared, h, K, V, g,

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev deps
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import (attention_ref, flash_attention,

@@ -2,6 +2,7 @@
 scheduler behavior (paper §3.1, §4.3)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev deps
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_cnns import PAPER_CNNS

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev deps
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ssd import ssd, ssd_ref
