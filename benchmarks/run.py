@@ -1,11 +1,14 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract, and dumps
-full rows to results/benchmarks.json.
+full rows to a timestamped ``results/benchmarks-<UTC stamp>.json`` (plus a
+``results/latest.json`` pointer) so successive runs never clobber each
+other.
 """
 
 from __future__ import annotations
 
+import datetime
 import json
 import os
 import sys
@@ -47,20 +50,32 @@ def main() -> None:
     except Exception as e:  # dry-run not yet executed
         print(f"roofline_16x16,0,unavailable({type(e).__name__})")
 
-    # per-engine telemetry accumulated by the unified dispatch surface
+    # per-engine telemetry accumulated by the unified dispatch surface AND
+    # the work-stealing runtime (same counters the Table-6 metric reads)
     from repro.engines import list_engines
     engines = {}
     for eng in list_engines():
         t = eng.telemetry
-        if t.gemms:
+        if t.gemms or t.jobs:
             engines[eng.name] = {"gemms": t.gemms, "jobs": t.jobs,
                                  "busy_s_est": t.busy_s,
-                                 "bytes_moved": t.bytes_moved}
-            print(f"engine_{eng.name},0,jobs={t.jobs}")
+                                 "bytes_moved": t.bytes_moved,
+                                 "steals": t.steals,
+                                 "wall_busy_s": t.wall_busy_s,
+                                 "idle_s": t.idle_s,
+                                 "busy_fraction": t.busy_fraction}
+            print(f"engine_{eng.name},0,jobs={t.jobs};steals={t.steals}")
     full["engine_telemetry"] = engines
 
-    with open("results/benchmarks.json", "w") as f:
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y%m%dT%H%M%SZ")
+    out_path = os.path.join("results", f"benchmarks-{stamp}.json")
+    with open(out_path, "w") as f:
         json.dump(full, f, indent=1, default=str)
+    # stable pointer for tooling that wants "the most recent run"
+    with open(os.path.join("results", "latest.json"), "w") as f:
+        json.dump({"path": out_path, "stamp": stamp}, f, indent=1)
+    print(f"results_path,0,{out_path}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,17 @@ def main():
     print(f"\npipelined inference: {stats['fps']:.1f} frames/s on CPU, "
           f"stage util {stats['stage_utilization']}")
 
+    # --- LIVE work stealing: one frame split across the PE pool -------------
+    from repro.soc import SynergyRuntime
+    with SynergyRuntime(["F-PE", "S-PE", "NEON"], name="cnn") as rt:
+        logits_rt = cnn_forward(cfg, params, x, runtime=rt)
+        st = rt.stats()
+    drift = float(jnp.max(jnp.abs(logits_rt - logits)))
+    print(f"\nruntime split across {list(st['engines'])}: "
+          f"{st['total_jobs']} tile jobs, {st['total_steals']} stolen, "
+          f"agg busy fraction {st['aggregate_busy_fraction']:.2f} "
+          f"(|logits drift| {drift:.2e})")
+
     # --- the paper's runtime, reproduced ------------------------------------
     print("\nZynq runtime simulation (calibrated DES):")
     net = build_simnet(cfg)

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["ThreadedPipeline", "EngineStage", "StageStats",
-           "gpipe_reference", "gpipe_spmd"]
+           "PipelineStageError", "gpipe_reference", "gpipe_spmd"]
 
 
 # ---------------------------------------------------------------------------
@@ -83,25 +83,53 @@ def _as_stage(spec: Union["EngineStage", tuple]) -> EngineStage:
 _STOP = object()
 
 
+@dataclasses.dataclass
+class _Failure:
+    """A stage exception, traveling the pipe in place of the frame so every
+    downstream mailbox keeps draining (no deadlock)."""
+
+    stage: str
+    error: BaseException
+
+
+class PipelineStageError(RuntimeError):
+    """Raised by :meth:`ThreadedPipeline.run` when a stage raised; the
+    original exception is chained as ``__cause__``."""
+
+
 class ThreadedPipeline:
     """Producer/consumer layer pipeline (paper §3.1, Figure 2).
 
     stages: list of :class:`EngineStage` or (name, fn) tuples — fn
     processes one frame's payload.  mailbox_capacity bounds frames in
     flight between adjacent stages.
+
+    ``runtime``: an optional :class:`repro.soc.SynergyRuntime` — stage
+    workers run under its :func:`~repro.soc.runtime_scope`, so stage GEMMs
+    split across the engine pool and an ``EngineStage.engine`` pin becomes
+    a queue-affinity hint rather than a hard route.  When None, a runtime
+    scope active in the caller's thread at :meth:`run` time is inherited.
+
+    A raising stage does NOT deadlock the pipe: the exception travels
+    downstream as a poison frame, every worker keeps draining its inbox,
+    and :meth:`run` re-raises :class:`PipelineStageError` after joining.
     """
 
     def __init__(self,
                  stages: Sequence[Union[EngineStage,
                                         tuple[str, Callable[[Any], Any]]]],
-                 mailbox_capacity: int = 4):
+                 mailbox_capacity: int = 4,
+                 runtime: Optional[Any] = None):
         self.stages = [_as_stage(s) for s in stages]
         self.mailboxes = [queue.Queue(maxsize=mailbox_capacity)
                           for _ in range(len(self.stages) + 1)]
         self.stats = [StageStats(s.name, engine=s.engine)
                       for s in self.stages]
+        self.runtime = runtime
 
-    def _worker(self, idx: int) -> None:
+    def _worker(self, idx: int, runtime) -> None:
+        import contextlib
+
         from repro.engines import engine_scope
         stage = self.stages[idx]
         fn = stage.fn
@@ -113,19 +141,36 @@ class ThreadedPipeline:
                     return raw(item)
         inbox, outbox = self.mailboxes[idx], self.mailboxes[idx + 1]
         st = self.stats[idx]
-        while True:
-            item = inbox.get()
-            if item is _STOP:
-                outbox.put(_STOP)
-                return
-            t0 = time.perf_counter()
-            out = fn(item)
-            st.busy_s += time.perf_counter() - t0
-            st.frames += 1
-            outbox.put(out)
+        if runtime is not None:
+            from repro.soc import runtime_scope
+            scope = runtime_scope(runtime)
+        else:
+            scope = contextlib.nullcontext()
+        with scope:
+            while True:
+                item = inbox.get()
+                if item is _STOP:
+                    outbox.put(_STOP)
+                    return
+                if isinstance(item, _Failure):   # pass the poison through
+                    outbox.put(item)
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    out = fn(item)
+                except BaseException as e:
+                    out = _Failure(stage.name, e)
+                st.busy_s += time.perf_counter() - t0
+                st.frames += 1
+                outbox.put(out)
 
     def run(self, frames: Sequence[Any]) -> tuple[list[Any], dict]:
-        threads = [threading.Thread(target=self._worker, args=(i,), daemon=True)
+        runtime = self.runtime
+        if runtime is None:
+            from repro.soc import current_runtime
+            runtime = current_runtime()
+        threads = [threading.Thread(target=self._worker, args=(i, runtime),
+                                    daemon=True)
                    for i in range(len(self.stages))]
         t0 = time.perf_counter()
         for t in threads:
@@ -136,15 +181,24 @@ class ThreadedPipeline:
             daemon=True)
         feeder.start()
         outputs = []
+        failure: Optional[_Failure] = None
         while True:
             item = self.mailboxes[-1].get()
             if item is _STOP:
                 break
+            if isinstance(item, _Failure):
+                failure = failure or item       # keep draining to _STOP
+                continue
             outputs.append(item)
         wall = time.perf_counter() - t0
         for t in threads:
             t.join()
         feeder.join()
+        if failure is not None:
+            raise PipelineStageError(
+                f"stage {failure.stage!r} raised "
+                f"{type(failure.error).__name__}: {failure.error}"
+            ) from failure.error
         util = {s.name: (s.busy_s / wall if wall > 0 else 0.0) for s in self.stats}
         return outputs, {
             "wall_s": wall,
@@ -152,6 +206,7 @@ class ThreadedPipeline:
             "stage_utilization": util,
             "stage_engines": {s.name: s.engine for s in self.stats
                               if s.engine is not None},
+            "runtime": runtime.stats() if runtime is not None else None,
         }
 
 

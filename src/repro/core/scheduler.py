@@ -29,6 +29,8 @@ import itertools
 from collections import deque
 from typing import Callable, Sequence
 
+from repro.soc.policy import pick_victim, should_steal
+
 from .clusters import (Accelerator, Cluster, arm_cost, cluster_partitions,
                        default_synergy_clusters)
 from .job import Job, JobSet
@@ -187,12 +189,10 @@ def simulate(net: SimNet,
             # thief thread: manager sees this cluster idle; stealer takes a
             # job from the busiest victim queue (job-level granularity —
             # §4.3 "work-stealing ... at the granularity of job-level").
-            # Tail guard: a slow accelerator (NEON/S-PE) does not steal the
-            # final jobs — on the last job of a layer a 2.4x-slower engine
-            # would become the straggler that stalls the whole frame.
-            victim = max(range(len(queues)), key=lambda q: len(queues[q]))
-            if queues[victim] and (acc.rel_rate >= 0.9
-                                   or len(queues[victim]) > 2):
+            # The decision is the SHARED policy in repro.soc.policy — the
+            # live SynergyRuntime and SimRuntime apply the same tail guard.
+            victim = pick_victim([len(q) for q in queues])
+            if should_steal(acc.rel_rate, len(queues[victim])):
                 job = queues[victim].popleft()
         if job is None:
             return

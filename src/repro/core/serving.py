@@ -102,8 +102,12 @@ class ServeStats:
     #: dispatcher accounting per job class: estimated engine-busy seconds
     job_busy_s: dict = dataclasses.field(
         default_factory=lambda: {"prefill": 0.0, "decode": 0.0})
-    #: job class -> engine name the dispatcher last routed it to
+    #: job class -> engine name the dispatcher (or the runtime's dominant
+    #: executor) last routed it to
     job_engine: dict = dataclasses.field(default_factory=dict)
+    #: runtime mode only: tile jobs executed / stolen across the pool
+    runtime_jobs: int = 0
+    runtime_steals: int = 0
 
     @property
     def slot_efficiency(self) -> float:
@@ -117,7 +121,8 @@ class SynergyServer:
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 64,
                  prefill_len: int = 16,
-                 dispatcher: Optional[Dispatcher] = None):
+                 dispatcher: Optional[Dispatcher] = None,
+                 runtime=None):
         from repro.models import decode_step, init_cache
         self.cfg = cfg
         self.params = params
@@ -130,6 +135,12 @@ class SynergyServer:
         self.pending: list[Request] = []
         self.stats = ServeStats()
         self.dispatcher = dispatcher or Dispatcher()
+        #: optional repro.soc.SynergyRuntime — prefill/decode jobsets become
+        #: runtime submissions (tile jobs spread by stealing: decode steps
+        #: soak up capacity an idle prefill engine leaves on the table)
+        self.runtime = runtime
+        if runtime is not None:
+            runtime.start()
 
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
@@ -166,9 +177,30 @@ class SynergyServer:
         return self.stats
 
     # ------------------------------------------------------------ internals
-    def _account(self, job) -> Engine:
-        """Route the job class through the dispatcher; book busy time."""
+    def _account(self, job) -> Optional[Engine]:
+        """Route the job class' JobSet: through the runtime (tile jobs
+        submitted, stolen, booked per executing engine) when one is
+        attached, else whole to the dispatcher's pick."""
         js = job.jobset()
+        if self.runtime is not None:
+            # queue-affinity hint: seed on the dispatcher's choice, let
+            # idle engines steal the tiles
+            try:
+                hint = self.dispatcher.select(js).name
+            except RuntimeError:
+                hint = None
+            fut = self.runtime.submit(js, affinity=hint)
+            fut.result(timeout=60.0)
+            acct = fut.accounting
+            total = sum(a["est_s"] for a in acct.values())
+            self.stats.job_busy_s[job.kind] += total
+            if acct:
+                dominant = max(acct, key=lambda n: acct[n]["jobs"])
+                self.stats.job_engine[job.kind] = dominant
+            self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
+            self.stats.runtime_steals += sum(a["steals"]
+                                             for a in acct.values())
+            return None
         eng = self.dispatcher.select(js)
         est = eng.estimate(js)
         eng.telemetry.record(js, est)

@@ -6,11 +6,15 @@ It does three things:
   1. Registers the GEMM's :class:`~repro.core.job.JobSet` with the active
      :class:`SynergyTrace` (trace-time metadata: the job decomposition the
      schedulers, cost model, and roofline analysis operate on).
-  2. Asks the :class:`~repro.engines.Dispatcher` for the best-capable
-     registered :class:`~repro.engines.Engine` (XLA dot on CPU dry-runs,
-     the Pallas ``tiled_mm`` kernel on TPU, or whatever the user
-     registered) and executes there.  The old ``impl='auto'|'xla'|'pallas'``
-     strings survive only as a deprecation shim over the engine lookup.
+  2. Executes: under an active :func:`repro.soc.runtime_scope` the JobSet's
+     tile jobs are SPLIT across the live engine pool and merged (work
+     stealing balances the split; an ``engine=`` pin is demoted to a
+     queue-affinity hint).  Otherwise it asks the
+     :class:`~repro.engines.Dispatcher` for the best-capable registered
+     :class:`~repro.engines.Engine` (XLA dot on CPU dry-runs, the Pallas
+     ``tiled_mm`` kernel on TPU, or whatever the user registered) and runs
+     the whole GEMM there.  The old ``impl='auto'|'xla'|'pallas'`` strings
+     survive only as a deprecation shim over the engine lookup.
   3. Records per-engine telemetry (jobs, estimated busy seconds, bytes
      moved) on both the engine and the active trace.
 
@@ -71,6 +75,20 @@ class SynergyTrace:
                       est_s: float) -> None:
         self.engine_stats.setdefault(engine_name, Telemetry()).record(js,
                                                                       est_s)
+
+    def record_runtime(self, accounting: dict) -> None:
+        """Book a SynergyRuntime submission's per-engine shares: the split
+        GEMM's jobs land on every engine that actually executed part of it
+        (stolen jobs included), on the same cost-model busy basis.  The
+        gemm itself counts ONCE, credited to the dominant executor, so
+        ``sum(gemms) == len(jobsets)`` holds on both dispatch paths."""
+        dominant = (max(accounting, key=lambda n: accounting[n]["jobs"])
+                    if accounting else None)
+        for name, acct in accounting.items():
+            t = self.engine_stats.setdefault(name, Telemetry())
+            t.record_jobs(acct["jobs"], acct["est_s"], acct["bytes"],
+                          gemms=int(name == dominant),
+                          steals=acct["steals"])
 
     @property
     def total_flops(self) -> int:
@@ -141,6 +159,24 @@ def synergy_matmul(a: jax.Array, b: jax.Array, *,
         js = tr.add(batch * m, n, k, tile, name=name or "gemm")
     else:
         js = JobSet.for_gemm(0, batch * m, n, k, tile, name=name or "gemm")
+
+    # Runtime scope: split this GEMM's tile jobs across the live engine
+    # pool and merge partials (work stealing balances the split).  An
+    # engine pin becomes a queue-affinity HINT, not a hard route.  Under a
+    # jit trace the arrays are Tracers the worker threads cannot touch, so
+    # traced call sites keep single-engine dispatch.
+    from repro.soc.runtime import current_runtime, is_concrete
+    rt = current_runtime()
+    if rt is not None and is_concrete(a, b, bias):
+        affinity = engine.name if isinstance(engine, Engine) else engine
+        a2 = a.reshape(-1, k)
+        y, accounting = rt.run_matmul(
+            js, a2, b, bias=bias, activation=activation,
+            tile=tile if isinstance(tile, tuple) else (tile,) * 3,
+            out_dtype=out_dtype, precision=precision, affinity=affinity)
+        if tr is not None:
+            tr.record_runtime(accounting)
+        return y.reshape(*lead, m, n)
 
     eng = dispatch_gemm(js, engine=engine)
     est_s = eng.estimate(js)

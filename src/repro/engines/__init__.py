@@ -21,9 +21,11 @@ Importing this package registers the built-in engines (``xla``,
 from .base import (CAP_EPILOGUE, CAP_GEMM, CAP_GRAD, CAP_INTERPRET,
                    CAP_ORACLE, CAP_SIM, CAP_TILED, CostModel, Engine,
                    Telemetry)
-from .registry import (OpVariant, find_engine, get_engine, list_engines,
-                       op_variants, register_engine, register_op_impl,
-                       registered, resolve_op, unregister_engine)
+from .registry import (OpVariant, add_registry_listener, find_engine,
+                       get_engine, list_engines, op_variants,
+                       register_engine, register_op_impl, registered,
+                       remove_registry_listener, resolve_op,
+                       unregister_engine)
 from .builtin import PallasTiledEngine, ReferenceEngine, XlaEngine
 from .sim import SIM_ENGINE_SPECS, SimPEEngine, make_sim_engines
 from .dispatch import (DEFAULT_DISPATCHER, Dispatcher, current_scope_engine,
@@ -35,6 +37,7 @@ __all__ = [
     "CAP_SIM", "CAP_ORACLE",
     "register_engine", "unregister_engine", "get_engine", "find_engine",
     "list_engines", "registered",
+    "add_registry_listener", "remove_registry_listener",
     "OpVariant", "register_op_impl", "resolve_op", "op_variants",
     "XlaEngine", "PallasTiledEngine", "ReferenceEngine",
     "SimPEEngine", "SIM_ENGINE_SPECS", "make_sim_engines",

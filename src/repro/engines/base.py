@@ -89,17 +89,24 @@ class CostModel:
 
 @dataclasses.dataclass
 class Telemetry:
-    """Per-engine dispatch counters.
+    """Per-engine dispatch AND runtime counters.
 
     ``busy_s`` is the cost-model estimate of seconds of engine time routed
     here (recorded at trace/dispatch time — the same accounting basis the
-    discrete-event simulator and the roofline use).  Updates are locked:
-    ThreadedPipeline stages trace GEMMs from concurrent worker threads."""
+    discrete-event simulator and the roofline use).  The runtime counters
+    are fed by :class:`repro.soc.SynergyRuntime` workers: ``steals`` is the
+    number of jobs this engine executed that it took from ANOTHER engine's
+    queue, ``wall_busy_s``/``idle_s`` are measured worker-thread seconds
+    executing jobs / waiting for work.  Updates are locked: ThreadedPipeline
+    stages and runtime workers write from concurrent threads."""
 
     gemms: int = 0
     jobs: int = 0
     busy_s: float = 0.0
     bytes_moved: int = 0
+    steals: int = 0
+    wall_busy_s: float = 0.0
+    idle_s: float = 0.0
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -107,11 +114,32 @@ class Telemetry:
         n_bytes = 0
         if jobset.num_jobs:
             n_bytes = jobset.num_jobs * next(jobset.jobs()).bytes_moved
+        self.record_jobs(jobset.num_jobs, est_s, n_bytes, gemms=1)
+
+    def record_jobs(self, n_jobs: int, est_s: float, n_bytes: int = 0, *,
+                    gemms: int = 0, steals: int = 0) -> None:
+        """Fine-grained accounting for PARTIAL jobsets — the runtime books
+        each engine's actual share of a split GEMM here."""
         with self._lock:
-            self.gemms += 1
-            self.jobs += jobset.num_jobs
+            self.gemms += gemms
+            self.jobs += n_jobs
             self.busy_s += est_s
             self.bytes_moved += n_bytes
+            self.steals += steals
+
+    def record_runtime(self, *, wall_busy_s: float = 0.0,
+                       idle_s: float = 0.0) -> None:
+        """Measured worker-thread time (live runtime only)."""
+        with self._lock:
+            self.wall_busy_s += wall_busy_s
+            self.idle_s += idle_s
+
+    @property
+    def busy_fraction(self) -> float:
+        """Measured busy / (busy + idle) of this engine's runtime worker
+        (the live analog of the simulator's Table-6 utilization)."""
+        denom = self.wall_busy_s + self.idle_s
+        return self.wall_busy_s / denom if denom > 0 else 0.0
 
     def merge(self, other: "Telemetry") -> None:
         snap = other.snapshot()
@@ -120,11 +148,15 @@ class Telemetry:
             self.jobs += snap.jobs
             self.busy_s += snap.busy_s
             self.bytes_moved += snap.bytes_moved
+            self.steals += snap.steals
+            self.wall_busy_s += snap.wall_busy_s
+            self.idle_s += snap.idle_s
 
     def snapshot(self) -> "Telemetry":
         with self._lock:
             return Telemetry(self.gemms, self.jobs, self.busy_s,
-                             self.bytes_moved)
+                             self.bytes_moved, self.steals,
+                             self.wall_busy_s, self.idle_s)
 
     def reset(self) -> None:
         with self._lock:
@@ -132,6 +164,9 @@ class Telemetry:
             self.jobs = 0
             self.busy_s = 0.0
             self.bytes_moved = 0
+            self.steals = 0
+            self.wall_busy_s = 0.0
+            self.idle_s = 0.0
 
 
 class Engine(abc.ABC):

@@ -26,16 +26,42 @@ from .base import Engine
 __all__ = [
     "register_engine", "unregister_engine", "get_engine", "find_engine",
     "list_engines", "registered",
+    "add_registry_listener", "remove_registry_listener",
     "OpVariant", "register_op_impl", "resolve_op", "op_variants",
 ]
 
 _LOCK = threading.RLock()
 _ENGINES: dict[str, Engine] = {}
+_LISTENERS: list[Callable[[str, Engine], None]] = []
 
 
 # ---------------------------------------------------------------------------
 # Engine registry
 # ---------------------------------------------------------------------------
+
+def add_registry_listener(fn: Callable[[str, Engine], None]) -> Callable:
+    """Subscribe ``fn(event, engine)`` to registry changes; ``event`` is
+    ``"register"`` or ``"unregister"``.  The live SynergyRuntime uses this
+    to rebalance its worker pool when engines come and go mid-run."""
+    with _LOCK:
+        _LISTENERS.append(fn)
+    return fn
+
+
+def remove_registry_listener(fn: Callable[[str, Engine], None]) -> None:
+    with _LOCK:
+        if fn in _LISTENERS:
+            _LISTENERS.remove(fn)
+
+
+def _notify(event: str, engine: Engine) -> None:
+    # outside _LOCK: listeners (runtime rebalance) take their own locks and
+    # may read the registry
+    with _LOCK:
+        listeners = list(_LISTENERS)
+    for fn in listeners:
+        fn(event, engine)
+
 
 def register_engine(engine: Engine, *, override: bool = False) -> Engine:
     """Register ``engine`` under ``engine.name``; returns it for chaining."""
@@ -45,12 +71,16 @@ def register_engine(engine: Engine, *, override: bool = False) -> Engine:
                 f"engine {engine.name!r} already registered "
                 f"({_ENGINES[engine.name]!r}); pass override=True to replace")
         _ENGINES[engine.name] = engine
+    _notify("register", engine)
     return engine
 
 
 def unregister_engine(name: str) -> Optional[Engine]:
     with _LOCK:
-        return _ENGINES.pop(name, None)
+        engine = _ENGINES.pop(name, None)
+    if engine is not None:
+        _notify("unregister", engine)
+    return engine
 
 
 def get_engine(name: str) -> Engine:
@@ -81,6 +111,8 @@ def registered(*engines: Engine) -> Iterator[tuple[Engine, ...]]:
         for e in engines:
             shadowed[e.name] = _ENGINES.get(e.name)
             _ENGINES[e.name] = e
+    for e in engines:
+        _notify("register", e)
     try:
         yield engines
     finally:
@@ -90,6 +122,12 @@ def registered(*engines: Engine) -> Iterator[tuple[Engine, ...]]:
                     _ENGINES.pop(name, None)
                 else:
                     _ENGINES[name] = prev
+        for e in engines:
+            prev = shadowed[e.name]
+            if prev is None:
+                _notify("unregister", e)
+            else:
+                _notify("register", prev)
 
 
 # ---------------------------------------------------------------------------

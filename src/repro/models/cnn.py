@@ -97,11 +97,28 @@ def _conv_via_jobs(x, w, b, stride, pad, tile, name, engine=None):
 
 
 def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
-                engine: str | None = None) -> jax.Array:
+                engine: str | None = None,
+                runtime=None) -> jax.Array:
     """x: (N, H, W, Cin) -> logits (N, num_classes).
 
     ``engine``: pin every GEMM to a registered engine; None lets the
-    dispatcher rank capable engines per GEMM (the default)."""
+    dispatcher rank capable engines per GEMM (the default).
+    ``runtime``: a :class:`repro.soc.SynergyRuntime` — every CONV/FC GEMM
+    is split across its engine pool and balanced by work stealing (with
+    ``engine`` demoted to a queue-affinity hint).  Don't combine with
+    ``jax.jit`` — traced arrays fall back to single-engine dispatch."""
+    import contextlib
+    if runtime is not None:
+        from repro.soc import runtime_scope
+        scope = runtime_scope(runtime)
+    else:
+        scope = contextlib.nullcontext()
+    with scope:
+        return _cnn_forward(cfg, params, x, engine=engine)
+
+
+def _cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
+                 engine: str | None = None) -> jax.Array:
     shapes, _ = cfg.trace_shapes()
     for i, (spec, *_rest) in enumerate(shapes):
         if spec[0] == "conv":

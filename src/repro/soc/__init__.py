@@ -1,0 +1,27 @@
+"""``repro.soc`` — the Synergy SoC execution layer (paper §4.3).
+
+Where :mod:`repro.engines` answers "*which* engine should run this JobSet",
+this package answers "*run it*": a live work-stealing runtime
+(:class:`SynergyRuntime`) with one worker per engine and per-engine job
+deques, the shared steal policy (:mod:`repro.soc.policy`) the discrete-event
+simulator applies, and a virtual-time conformance twin (:class:`SimRuntime`)
+so simulated and live steal decisions agree for identical cost models.
+
+    from repro.soc import SynergyRuntime, runtime_scope
+
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt, rt.scope():
+        y = synergy_matmul(a, b)      # tiles split across BOTH engines
+    print(rt.stats()["total_steals"])
+"""
+
+from .policy import (STEAL_QUEUE_DEPTH, STEAL_RATE_FLOOR, pick_victim,
+                     should_steal)
+from .runtime import (RuntimeFuture, SynergyRuntime, current_runtime,
+                      runtime_scope)
+from .simrt import SimRuntime, SimRuntimeResult
+
+__all__ = [
+    "SynergyRuntime", "RuntimeFuture", "runtime_scope", "current_runtime",
+    "SimRuntime", "SimRuntimeResult",
+    "should_steal", "pick_victim", "STEAL_RATE_FLOOR", "STEAL_QUEUE_DEPTH",
+]

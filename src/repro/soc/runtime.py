@@ -1,0 +1,633 @@
+"""SynergyRuntime — live work-stealing execution over engine pools (§4.3).
+
+PR-1 gave every GEMM a *router* (the Dispatcher picks ONE engine per
+JobSet).  This module gives it an *executor*: a runtime that owns one
+worker thread per engine, a per-engine job deque, and the paper's thief
+protocol — the manager notices idle engines (the idle book), the stealer
+moves jobs from the busiest victim queue at job granularity, guarded by the
+shared tail policy in :mod:`repro.soc.policy` (the same function the
+discrete-event simulator applies).
+
+Execution model
+---------------
+A *submission* is one JobSet plus its executable decomposition.  For a real
+GEMM the unit of scheduling is a **row panel** — one grid row of the
+paper's (t1, t2) tile jobs; every tile job belongs to exactly one panel, so
+panels steal freely while the merge stays a concatenation (no cross-engine
+accumulation).  Accounting-only submissions (serving prefill/decode
+proxies) schedule at single tile-job granularity.
+
+Engines come and go mid-run: ``add_engine`` / ``remove_engine`` (or the
+process registry's ``register_engine`` / ``unregister_engine`` when
+``follow_registry=True``) trigger a live rebalance — queued jobs are
+re-seeded across the surviving pool proportional to cost-model rates.  This
+is the paper's "adapt to different network configurations at runtime
+without changing the hardware" as an API property.
+
+Telemetry flows through the per-engine :class:`repro.engines.Telemetry`
+(cost-model ``busy_s`` on the simulator's accounting basis, plus measured
+``wall_busy_s``/``idle_s`` and ``steals``), so ``benchmarks/run.py`` and
+the Table-6 utilization metric read the same counters.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Iterable, Optional, Sequence, Union
+
+import jax
+
+from repro.engines.base import CAP_GEMM, Engine
+from repro.engines.registry import (add_registry_listener, get_engine,
+                                    remove_registry_listener)
+
+from .policy import pick_victim, should_steal
+
+__all__ = ["SynergyRuntime", "RuntimeFuture", "runtime_scope",
+           "current_runtime"]
+
+#: idle-book wait quantum.  Wakeups are notify-driven (submit / pool change
+#: / shutdown all notify_all); the timeout is only a lost-wakeup backstop.
+_IDLE_WAIT_S = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Futures + submissions
+# ---------------------------------------------------------------------------
+
+class RuntimeFuture:
+    """Completion handle for one submission."""
+
+    def __init__(self, jobset):
+        self.jobset = jobset
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        #: engine name -> {"jobs", "est_s", "bytes", "steals"} for the share
+        #: of this submission each engine actually executed.
+        self.accounting: dict[str, dict] = {}
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"submission {self.jobset.name!r} not done in {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    # internal ------------------------------------------------------------
+    def _finish(self, value: Any, error: Optional[BaseException]) -> None:
+        self._value, self._error = value, error
+        self._event.set()
+
+
+class _RuntimeJob:
+    """One schedulable unit: ``n_jobs`` identical tile jobs of a submission.
+
+    ``fn(engine) -> part`` does the actual compute (None = accounting-only);
+    ``index`` is the merge slot."""
+
+    __slots__ = ("sub", "index", "fn", "n_jobs", "job_macs", "job_bytes")
+
+    def __init__(self, sub: "_Submission", index: int, fn, n_jobs: int,
+                 job_macs: int, job_bytes: int):
+        self.sub = sub
+        self.index = index
+        self.fn = fn
+        self.n_jobs = n_jobs
+        self.job_macs = job_macs
+        self.job_bytes = job_bytes
+
+
+class _Submission:
+    def __init__(self, jobset, n_parts: int,
+                 merge: Optional[Callable[[list], Any]],
+                 on_done: Optional[Callable[["RuntimeFuture"], None]] = None):
+        self.future = RuntimeFuture(jobset)
+        self.merge = merge
+        self.on_done = on_done
+        self.parts: list = [None] * n_parts
+        self.exec_counts = [0] * n_parts   # work-conservation audit trail
+        self.future.execution_counts = self.exec_counts
+        self.pending = n_parts
+        self.error: Optional[BaseException] = None
+        self.lock = threading.Lock()
+
+    def complete(self, job: _RuntimeJob, engine_name: str, part: Any,
+                 err: Optional[BaseException], est_s: float,
+                 stolen: bool) -> None:
+        with self.lock:
+            self.parts[job.index] = part
+            self.exec_counts[job.index] += 1
+            acct = self.future.accounting.setdefault(
+                engine_name, {"jobs": 0, "est_s": 0.0, "bytes": 0,
+                              "steals": 0})
+            acct["jobs"] += job.n_jobs
+            acct["est_s"] += est_s
+            acct["bytes"] += job.n_jobs * job.job_bytes
+            acct["steals"] += int(stolen)
+            if err is not None and self.error is None:
+                self.error = err
+            self.pending -= 1
+            last = self.pending == 0
+        if not last:
+            return
+        if self.error is not None:
+            self.future._finish(None, self.error)
+        else:
+            try:
+                value = self.merge(self.parts) if self.merge else None
+            except BaseException as e:      # merge bug must not hang callers
+                self.future._finish(None, e)
+            else:
+                self.future._finish(value, None)
+        if self.on_done is not None:
+            self.on_done(self.future)
+
+
+class _Worker:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: deque[_RuntimeJob] = deque()
+        self.thread: Optional[threading.Thread] = None
+        self.stopped = False
+        self.idle = False
+        # per-runtime counters (engine.telemetry is process-global)
+        self.jobs = 0
+        self.steals = 0
+        self.est_busy_s = 0.0
+        self.wall_busy_s = 0.0
+        self.idle_s = 0.0
+
+    @property
+    def rate(self) -> float:
+        try:
+            return self.engine.cost.macs_per_s
+        except NotImplementedError:
+            return 1.0
+
+    def job_time(self, macs: int, n_bytes: int) -> float:
+        try:
+            return self.engine.cost.job_time(macs, n_bytes)
+        except NotImplementedError:
+            return 0.0
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+class SynergyRuntime:
+    """Work-stealing executor over a pool of registered engines.
+
+    engines: engine names/instances; None = every non-sim GEMM-capable
+    engine the default dispatcher would consider.  ``follow_registry=True``
+    mirrors ``register_engine``/``unregister_engine`` into the live pool.
+    Use as a context manager, or ``start()``/``shutdown()`` explicitly.
+    """
+
+    def __init__(self, engines: Optional[Iterable[Union[str, Engine]]] = None,
+                 *, require: Iterable[str] = (CAP_GEMM,),
+                 follow_registry: bool = False, name: str = "runtime"):
+        self.name = name
+        self.require = frozenset(require)
+        # RLock: submission-completion hooks can fire from paths that
+        # already hold the runtime lock (cancel / orphan-fail)
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._workers: dict[str, _Worker] = {}
+        self._retired: list[threading.Thread] = []
+        #: counters of removed engines, so stats() totals never go backwards
+        self._retired_counters = {"jobs": 0, "steals": 0, "est_busy_s": 0.0,
+                                  "wall_busy_s": 0.0, "idle_s": 0.0}
+        self._started = False
+        self._stopping = False
+        self._rebalances = 0
+        self._submissions = 0
+        self._inflight = 0     # incomplete submissions (gates idle booking)
+        self._listener = None
+        if engines is None:
+            from repro.engines.dispatch import DEFAULT_DISPATCHER
+            pool: list[Engine] = DEFAULT_DISPATCHER.candidates(require)
+        else:
+            pool = [get_engine(e) if isinstance(e, str) else e
+                    for e in engines]
+        if not pool:
+            raise ValueError("SynergyRuntime needs at least one engine")
+        for eng in pool:
+            self._workers[eng.name] = _Worker(eng)
+        self._follow_registry = follow_registry
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "SynergyRuntime":
+        with self._cond:
+            if self._started:
+                return self
+            self._started = True
+            self._stopping = False
+            for w in self._workers.values():
+                self._spawn(w)
+        if self._follow_registry and self._listener is None:
+            self._listener = add_registry_listener(self._on_registry_event)
+        return self
+
+    def _spawn(self, w: _Worker) -> None:
+        w.thread = threading.Thread(
+            target=self._worker_loop, args=(w,), daemon=True,
+            name=f"synergy-{self.name}-{w.engine.name}")
+        w.thread.start()
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: float = 30.0) -> None:
+        if self._listener is not None:
+            remove_registry_listener(self._listener)
+            self._listener = None
+        with self._cond:
+            if not self._started:
+                return
+            if not drain:
+                self._cancel_queued_locked("runtime shut down")
+            self._stopping = True
+            self._cond.notify_all()
+            threads = [w.thread for w in self._workers.values()
+                       if w.thread is not None] + self._retired
+        for t in threads:
+            t.join(timeout)
+        with self._cond:
+            self._started = False
+            self._retired.clear()
+
+    def _cancel_queued_locked(self, why: str) -> None:
+        for w in self._workers.values():
+            while w.queue:
+                job = w.queue.popleft()
+                job.sub.complete(job, w.engine.name, None,
+                                 RuntimeError(why), 0.0, False)
+
+    def __enter__(self) -> "SynergyRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------- pool changes
+    @property
+    def engine_names(self) -> list[str]:
+        with self._lock:
+            return list(self._workers)
+
+    def add_engine(self, engine: Union[str, Engine]) -> None:
+        """Bring an engine online mid-run; queued work rebalances onto it."""
+        eng = get_engine(engine) if isinstance(engine, str) else engine
+        with self._cond:
+            if eng.name in self._workers:
+                return
+            w = _Worker(eng)
+            self._workers[eng.name] = w
+            if self._started:
+                self._spawn(w)
+                self._rebalance_locked()
+            self._cond.notify_all()
+
+    def remove_engine(self, name: str) -> bool:
+        """Retire an engine mid-run; its queued jobs move to survivors (the
+        in-flight job, if any, finishes on the retiring engine, and its
+        counters fold into the runtime totals)."""
+        with self._cond:
+            w = self._workers.pop(name, None)
+            if w is None:
+                return False
+            orphans = self._retire_worker_locked(w)
+            if self._workers:
+                self._seed_locked(orphans, affinity=None)
+                self._rebalance_locked()
+            else:
+                for job in orphans:
+                    job.sub.complete(job, name, None,
+                                     RuntimeError("no engines left"), 0.0,
+                                     False)
+            self._cond.notify_all()
+            return True
+
+    def _retire_worker_locked(self, w: _Worker) -> list[_RuntimeJob]:
+        w.stopped = True
+        orphans = list(w.queue)
+        w.queue.clear()
+        if w.thread is not None:
+            self._retired.append(w.thread)
+        c = self._retired_counters
+        c["jobs"] += w.jobs
+        c["steals"] += w.steals
+        c["est_busy_s"] += w.est_busy_s
+        c["wall_busy_s"] += w.wall_busy_s
+        c["idle_s"] += w.idle_s
+        return orphans
+
+    def _on_registry_event(self, event: str, engine: Engine) -> None:
+        if not engine.supports(self.require):
+            return
+        if event == "register":
+            # re-registration under the same name swaps the live engine
+            # ATOMICALLY: the replacement inherits the old queue, so a
+            # single-engine pool never transits through "no engines left"
+            with self._cond:
+                old = self._workers.pop(engine.name, None)
+                orphans = (self._retire_worker_locked(old)
+                           if old is not None else [])
+                w = _Worker(engine)
+                self._workers[engine.name] = w
+                w.queue.extend(orphans)
+                if self._started:
+                    self._spawn(w)
+                    self._rebalance_locked()
+                self._cond.notify_all()
+        elif event == "unregister":
+            self.remove_engine(engine.name)
+
+    def _rebalance_locked(self) -> None:
+        """Gather every queued (unstarted) job and re-seed proportional to
+        the current pool's cost-model rates."""
+        pending: list[_RuntimeJob] = []
+        for w in self._workers.values():
+            pending.extend(w.queue)
+            w.queue.clear()
+        if pending:
+            self._seed_locked(pending, affinity=None)
+        self._rebalances += 1
+
+    # --------------------------------------------------------- scheduling
+    def _seed_locked(self, jobs: Sequence[_RuntimeJob],
+                     affinity: Optional[str]) -> None:
+        if affinity is not None and affinity in self._workers:
+            self._workers[affinity].queue.extend(jobs)
+            return
+        # LPT-style seed (§3.1.1): greedily place each job on the worker
+        # with the smallest projected finish time; stealing fixes the rest.
+        workers = list(self._workers.values())
+        loads = [sum(j.n_jobs * w.job_time(j.job_macs, j.job_bytes)
+                     for j in w.queue) for w in workers]
+        for job in jobs:
+            times = [w.job_time(job.job_macs, job.job_bytes) * job.n_jobs
+                     for w in workers]
+            i = min(range(len(workers)), key=lambda i: loads[i] + times[i])
+            loads[i] += times[i]
+            workers[i].queue.append(job)
+
+    def _try_steal_locked(self, thief: _Worker):
+        """The stealer: busiest victim queue, shared tail-guard policy,
+        steal from the TAIL (victims pop their own head)."""
+        names = [n for n in self._workers if n != thief.engine.name]
+        if not names:
+            return None
+        lens = [len(self._workers[n].queue) for n in names]
+        if not any(lens):
+            return None
+        victim = self._workers[names[pick_victim(lens)]]
+        fastest = max(w.rate for w in self._workers.values())
+        rel = thief.rate / fastest if fastest > 0 else 1.0
+        if should_steal(rel, len(victim.queue)):
+            return victim.queue.pop()
+        return None
+
+    def _worker_loop(self, w: _Worker) -> None:
+        while True:
+            job, stolen = None, False
+            with self._cond:
+                while True:
+                    if w.queue:
+                        job = w.queue.popleft()
+                        break
+                    if w.stopped:      # retired: never steal NEW work
+                        return
+                    job = self._try_steal_locked(w)
+                    if job is not None:
+                        stolen = True
+                        break
+                    if self._stopping:  # shutdown drain: all queues empty
+                        return
+                    # idle book: park until the manager (a submit/notify)
+                    # wakes us.  Idle is booked only while a submission is
+                    # actually outstanding, so busy_fraction measures
+                    # utilization of the WORKLOAD, not runtime lifetime.
+                    w.idle = True
+                    t0 = time.perf_counter()
+                    busy_elsewhere = self._inflight > 0
+                    self._cond.wait(_IDLE_WAIT_S)
+                    if busy_elsewhere:
+                        dt = time.perf_counter() - t0
+                        w.idle_s += dt
+                        w.engine.telemetry.record_runtime(idle_s=dt)
+                w.idle = False
+            self._execute(w, job, stolen)
+            if w.stopped:
+                return
+
+    def _execute(self, w: _Worker, job: _RuntimeJob, stolen: bool) -> None:
+        eng = w.engine
+        err, part = None, None
+        t0 = time.perf_counter()
+        try:
+            if job.fn is not None:
+                part = job.fn(eng)
+        except BaseException as e:
+            err = e
+        dt = time.perf_counter() - t0
+        est = job.n_jobs * w.job_time(job.job_macs, job.job_bytes)
+        w.jobs += job.n_jobs
+        w.steals += int(stolen)
+        w.est_busy_s += est
+        w.wall_busy_s += dt
+        eng.telemetry.record_jobs(job.n_jobs, est, job.n_jobs * job.job_bytes,
+                                  steals=int(stolen))
+        eng.telemetry.record_runtime(wall_busy_s=dt)
+        job.sub.complete(job, eng.name, part, err, est, stolen)
+
+    # -------------------------------------------------------- submissions
+    def _on_submission_done(self, fut: RuntimeFuture) -> None:
+        with self._cond:
+            self._inflight -= 1
+            # one split GEMM is still ONE gemm: credit it to the engine
+            # that executed the largest share (dispatcher-path parity)
+            eng = None
+            if fut.accounting:
+                dom = max(fut.accounting,
+                          key=lambda n: fut.accounting[n]["jobs"])
+                w = self._workers.get(dom)
+                eng = w.engine if w is not None else None
+        if eng is not None:
+            eng.telemetry.record_jobs(0, 0.0, 0, gemms=1)
+
+    def _submit_jobs(self, jobset, units: list[tuple], merge,
+                     affinity: Optional[str]) -> RuntimeFuture:
+        """units: list of (fn, n_jobs, job_macs, job_bytes)."""
+        sub = _Submission(jobset, len(units), merge,
+                          on_done=self._on_submission_done)
+        jobs = [_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes)
+                for i, (fn, n_jobs, macs, nbytes) in enumerate(units)]
+        with self._cond:
+            if not self._started:
+                raise RuntimeError(f"runtime {self.name!r} is not started")
+            self._submissions += 1
+            self._inflight += 1
+            self._seed_locked(jobs, affinity)
+            self._cond.notify_all()
+        return sub.future
+
+    def submit(self, jobset, *, affinity: Optional[str] = None,
+               granularity: str = "job") -> RuntimeFuture:
+        """Accounting-only submission: the JobSet's tile jobs are scheduled
+        (and stolen) across the pool, booking cost-model busy time per
+        engine, with no array compute.  This is how serving prefill/decode
+        proxies flow through the runtime."""
+        j = next(jobset.jobs()) if jobset.num_jobs else None
+        if j is None:
+            units = []
+        elif granularity == "job":
+            units = [(None, 1, j.macs, j.bytes_moved)] * jobset.num_jobs
+        else:                       # "row": one unit per grid row of tiles
+            gm, gn = jobset.grid
+            units = [(None, gn, j.macs, j.bytes_moved)] * gm
+        if not units:
+            fut = RuntimeFuture(jobset)
+            fut._finish(None, None)
+            return fut
+        return self._submit_jobs(jobset, units, None, affinity)
+
+    def submit_gemm(self, a, b, *, jobset, bias=None, activation=None,
+                    tile=(256, 256, 256), out_dtype=None, precision=None,
+                    affinity: Optional[str] = None) -> RuntimeFuture:
+        """Split one GEMM's tile jobs across the pool as row panels; the
+        future's result is the merged ``act(A @ B + bias)``."""
+        import jax.numpy as jnp
+        ts_m = jobset.ts_m
+        m = a.shape[0]
+        gm, gn = jobset.grid
+        j = next(jobset.jobs())
+
+        def make_fn(r0: int, r1: int):
+            def fn(eng: Engine):
+                return eng.execute(a[r0:r1], b, bias=bias,
+                                   activation=activation, tile=tile,
+                                   out_dtype=out_dtype, precision=precision)
+            return fn
+
+        units = []
+        for t1 in range(gm):
+            r0, r1 = t1 * ts_m, min((t1 + 1) * ts_m, m)
+            units.append((make_fn(r0, r1), gn, j.macs, j.bytes_moved))
+
+        def merge(parts: list):
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+        return self._submit_jobs(jobset, units, merge, affinity)
+
+    def run_matmul(self, jobset, a, b, *, bias=None, activation=None,
+                   tile=(256, 256, 256), out_dtype=None, precision=None,
+                   affinity: Optional[str] = None,
+                   timeout: float = 300.0):
+        """Blocking ``submit_gemm`` — what ``synergy_matmul`` calls under a
+        :func:`runtime_scope`.  Returns (result, accounting)."""
+        fut = self.submit_gemm(a, b, jobset=jobset, bias=bias,
+                               activation=activation, tile=tile,
+                               out_dtype=out_dtype, precision=precision,
+                               affinity=affinity)
+        return fut.result(timeout), fut.accounting
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._lock:
+            per = {}
+            for name, w in self._workers.items():
+                denom = w.wall_busy_s + w.idle_s
+                per[name] = {
+                    "jobs": w.jobs, "steals": w.steals,
+                    "est_busy_s": w.est_busy_s,
+                    "wall_busy_s": w.wall_busy_s, "idle_s": w.idle_s,
+                    "busy_fraction": w.wall_busy_s / denom if denom else 0.0,
+                    "queued": len(w.queue),
+                }
+            ests = [p["est_busy_s"] for p in per.values()]
+            agg = (sum(ests) / (len(ests) * max(ests))
+                   if ests and max(ests) > 0 else 0.0)
+            retired = dict(self._retired_counters)
+            return {
+                "engines": per,
+                "retired": retired,
+                "submissions": self._submissions,
+                "rebalances": self._rebalances,
+                # totals include retired engines' work so a hot-unplug
+                # never makes the counters go backwards
+                "total_jobs": sum(p["jobs"] for p in per.values())
+                + retired["jobs"],
+                "total_steals": sum(p["steals"] for p in per.values())
+                + retired["steals"],
+                # Table-6 analog on the cost-model basis: total busy over
+                # pool-size x makespan-proxy (busiest CURRENT engine's est)
+                "aggregate_busy_fraction": agg,
+            }
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            for w in self._workers.values():
+                w.jobs = w.steals = 0
+                w.est_busy_s = w.wall_busy_s = w.idle_s = 0.0
+            self._submissions = 0
+            self._rebalances = 0
+
+    def scope(self):
+        """``with rt.scope(): ...`` — route every ``synergy_matmul`` in the
+        process through this runtime (see :func:`runtime_scope`)."""
+        return runtime_scope(self)
+
+    def __repr__(self) -> str:
+        return (f"<SynergyRuntime {self.name!r} "
+                f"engines={self.engine_names}>")
+
+
+# ---------------------------------------------------------------------------
+# Scope plumbing (how synergy_matmul finds the runtime)
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def current_runtime() -> Optional[SynergyRuntime]:
+    """The innermost runtime scope active in THIS thread (scopes are
+    strictly thread-local, so a scope in one thread never hijacks GEMMs —
+    or explicit ``engine=`` pins — in unrelated threads).  Components that
+    fan work out to their own threads propagate the scope explicitly:
+    ``ThreadedPipeline.run`` captures the caller's scope and re-enters it
+    in every stage worker."""
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def runtime_scope(rt: SynergyRuntime):
+    """Route every ``synergy_matmul`` in this thread under the block
+    through ``rt``: JobSets are SPLIT across the pool and merged, instead
+    of routed whole to one engine.  Starts the runtime if needed; does not
+    shut it down on exit."""
+    rt.start()
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    stack.append(rt)
+    try:
+        yield rt
+    finally:
+        stack.pop()
+
+
+def is_concrete(*arrays) -> bool:
+    """Runtime splitting needs concrete arrays (worker threads cannot share
+    another thread's JAX trace); under jit we fall back to single-engine
+    dispatch."""
+    tracer = getattr(jax.core, "Tracer", ())
+    return not any(isinstance(x, tracer) for x in arrays)

@@ -149,6 +149,47 @@ def test_impl_string_shim_warns_and_works():
         synergy_matmul(a, b, impl="auto")   # auto -> dispatcher
 
 
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_impl_shim_routes_to_same_engine_as_new_api(impl):
+    """The legacy string and the new engine= spelling must land on the
+    SAME registered engine (trace-visible routing identity)."""
+    a, b = _ab(16, 8, 8, seed=11)
+    tr_old, tr_new = SynergyTrace(), SynergyTrace()
+    with tr_old.activate(), pytest.warns(DeprecationWarning):
+        synergy_matmul(a, b, tile=8, impl=impl)
+    with tr_new.activate():
+        synergy_matmul(a, b, tile=8, engine=impl)
+    assert set(tr_old.engine_stats) == set(tr_new.engine_stats) == {impl}
+    # explicit engine= wins over a conflicting legacy string
+    tr = SynergyTrace()
+    with tr.activate(), pytest.warns(DeprecationWarning):
+        synergy_matmul(a, b, tile=8, impl=impl, engine="reference")
+    assert set(tr.engine_stats) == {"reference"}
+
+
+def test_engine_scope_nesting_restores_outer_pin():
+    from repro.engines import current_scope_engine, engine_scope
+    a, b = _ab(16, 8, 8, seed=12)
+    assert current_scope_engine() is None
+    with engine_scope("reference"):
+        with engine_scope("xla"):
+            assert current_scope_engine() == "xla"
+            tr = SynergyTrace()
+            with tr.activate():
+                synergy_matmul(a, b, tile=8)
+            assert set(tr.engine_stats) == {"xla"}
+        assert current_scope_engine() == "reference"
+        tr = SynergyTrace()
+        with tr.activate():
+            synergy_matmul(a, b, tile=8)
+        assert set(tr.engine_stats) == {"reference"}
+        # engine_scope(None) re-enables dispatcher auto-selection inside
+        # an outer pin
+        with engine_scope(None):
+            assert current_scope_engine() is None
+    assert current_scope_engine() is None
+
+
 def test_resolve_op_variants():
     # auto resolves to an available variant; explicit names resolve even
     # when unavailable for auto (Pallas interpret off-TPU)

@@ -5,8 +5,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.pipeline import ThreadedPipeline, gpipe_reference
+from repro.core.pipeline import (PipelineStageError, ThreadedPipeline,
+                                 gpipe_reference)
 
 
 def test_threaded_pipeline_order_and_outputs():
@@ -35,6 +37,37 @@ def test_threaded_pipeline_overlaps_stages():
     wall = time.perf_counter() - t0
     assert len(outs) == n
     assert wall < n * 2 * dt * 0.8   # clearly better than serial
+
+
+def test_raising_stage_does_not_deadlock():
+    """Regression: a stage exception used to kill the worker thread and
+    leave run() blocked forever on the final mailbox.  Now the failure
+    drains the pipe and re-raises, well before any deadlock timeout."""
+    def boom(x):
+        if x == 5:
+            raise ValueError("frame 5 is cursed")
+        return x
+
+    pipe = ThreadedPipeline([("pre", lambda x: x), ("boom", boom),
+                             ("post", lambda x: x * 2)],
+                            mailbox_capacity=2)
+    t0 = time.perf_counter()
+    with pytest.raises(PipelineStageError, match="boom") as ei:
+        pipe.run(list(range(20)))
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert time.perf_counter() - t0 < 10.0
+    # the pipeline object is not poisoned: a fresh run still works
+    pipe2 = ThreadedPipeline([("ok", lambda x: x + 1)])
+    outs, _ = pipe2.run([1, 2, 3])
+    assert outs == [2, 3, 4]
+
+
+def test_raising_first_frame_and_multiple_failures():
+    """Even frame 0 failing (nothing ever reaches the sink) and repeated
+    failures must drain cleanly; the FIRST failure is reported."""
+    pipe = ThreadedPipeline([("always", lambda x: 1 / 0)])
+    with pytest.raises(PipelineStageError, match="always"):
+        pipe.run(list(range(8)))
 
 
 def test_gpipe_reference_matches_sequential():

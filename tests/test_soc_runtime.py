@@ -1,0 +1,392 @@
+"""SynergyRuntime: work-stealing execution over live engine pools.
+
+Covers the acceptance criteria of the runtime PR: split-and-merge GEMMs
+match the oracle, work conservation under randomized steal timing, nonzero
+steals + strictly higher aggregate busy fraction vs single-engine pinning
+for a steady-frame ThreadedPipeline, live add/remove rebalance (including
+registry-driven), serving submissions, and DES <-> SimRuntime conformance.
+"""
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clusters import Accelerator, Cluster
+from repro.core.job import JobSet
+from repro.core.pipeline import EngineStage, ThreadedPipeline
+from repro.core.scheduler import SimLayer, SimNet, simulate
+from repro.core.synergy_mm import SynergyTrace, synergy_matmul
+from repro.engines import (CAP_GEMM, CostModel, Engine, get_engine,
+                           registered)
+from repro.soc import (SimRuntime, SynergyRuntime, current_runtime,
+                       runtime_scope, should_steal)
+
+
+def _ab(m, k, n, seed=0):
+    ka, kb = jax.random.split(jax.random.key(seed))
+    return (jax.random.normal(ka, (m, k)), jax.random.normal(kb, (k, n)))
+
+
+class _DelayEngine(Engine):
+    """Deterministic-output engine with seeded random per-job delays —
+    randomized steal timing without randomized results."""
+
+    def __init__(self, name, macs_per_s=1e9, seed=0, max_delay_s=0.004):
+        super().__init__(name, {CAP_GEMM, "epilogue"},
+                         cost=CostModel(macs_per_s=macs_per_s))
+        self._rng = random.Random(seed)
+        self._max_delay_s = max_delay_s
+        self.executed = 0
+
+    def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                out_dtype=None, precision=None):
+        time.sleep(self._rng.random() * self._max_delay_s)
+        self.executed += 1
+        y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        if bias is not None:
+            y = y + bias
+        if activation is not None:
+            y = activation(y)
+        return y.astype(out_dtype or a.dtype)
+
+
+# ------------------------------------------------------------ split + merge
+
+def test_runtime_scope_splits_and_matches_dot():
+    a, b = _ab(300, 64, 48)
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt, rt.scope():
+        tr = SynergyTrace()
+        with tr.activate():
+            y = synergy_matmul(a, b, tile=32, name="split")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, b)),
+                               rtol=1e-4, atol=1e-4)
+    # all 10x2 tile jobs booked, across however many engines executed
+    assert sum(t.jobs for t in tr.engine_stats.values()) == 20
+    stats = rt.stats()
+    assert stats["total_jobs"] == 20
+    assert stats["submissions"] == 1
+
+
+def test_runtime_scope_epilogue_and_border_tiles():
+    a, b = _ab(70, 33, 45, seed=3)       # border tiles in every direction
+    bias = jax.random.normal(jax.random.key(9), (45,))
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt, rt.scope():
+        y = synergy_matmul(a, b, bias=bias, activation=jax.nn.relu, tile=32)
+    ref = get_engine("reference").execute(a, b, bias=bias,
+                                          activation=jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_runtime_scope_is_inert_under_jit():
+    """Traced arrays cannot cross worker threads: under jit the call falls
+    back to single-engine dispatch and stays correct."""
+    a, b = _ab(64, 32, 32, seed=4)
+    f = jax.jit(lambda a, b: synergy_matmul(a, b, tile=32))
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt, rt.scope():
+        y = f(a, b)
+        assert rt.stats()["total_jobs"] == 0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_current_runtime_scope_nesting():
+    rt1 = SynergyRuntime(["F-PE"], name="outer")
+    rt2 = SynergyRuntime(["S-PE"], name="inner")
+    assert current_runtime() is None
+    try:
+        with runtime_scope(rt1):
+            assert current_runtime() is rt1
+            with runtime_scope(rt2):
+                assert current_runtime() is rt2
+            assert current_runtime() is rt1
+        assert current_runtime() is None
+    finally:
+        rt1.shutdown()
+        rt2.shutdown()
+
+
+# ------------------------------------------------------- work conservation
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_work_conservation_under_randomized_stealing(seed):
+    """Every tile job executes exactly once no matter how steals interleave,
+    and the merged result is bit-exact vs the same split executed serially
+    on one engine of the same family."""
+    engines = [_DelayEngine(f"d{i}", macs_per_s=(i + 1) * 1e9,
+                            seed=seed * 10 + i) for i in range(3)]
+    a, b = _ab(17 * 16, 40, 24, seed=seed)
+    js = JobSet.for_gemm(0, a.shape[0], 24, 40, 16)
+    with SynergyRuntime(engines) as rt:
+        fut = rt.submit_gemm(a, b, jobset=js, tile=(16, 16, 16))
+        y = fut.result(60)
+    assert fut.execution_counts == [1] * 17          # exactly once, per panel
+    acct_jobs = sum(x["jobs"] for x in fut.accounting.values())
+    assert acct_jobs == js.num_jobs == 17 * 2
+    assert sum(e.executed for e in engines) == 17
+    # bit-exact oracle: same row panels on a single same-family engine
+    solo = _DelayEngine("solo", seed=99, max_delay_s=0.0)
+    parts = [solo.execute(a[r:r + 16], b) for r in range(0, a.shape[0], 16)]
+    assert np.array_equal(np.asarray(y), np.asarray(jnp.concatenate(parts)))
+
+
+def test_accounting_submission_conserves_jobs():
+    js = JobSet.for_gemm(0, 320, 128, 64, 32)
+    with SynergyRuntime(["F-PE", "S-PE", "NEON"]) as rt:
+        futs = [rt.submit(js, affinity="F-PE") for _ in range(4)]
+        for fut in futs:
+            fut.result(30)
+            assert sum(x["jobs"] for x in fut.accounting.values()) \
+                == js.num_jobs
+    assert rt.stats()["total_jobs"] == 4 * js.num_jobs
+
+
+# ------------------------------------- acceptance: steals + busy fraction
+
+def _agg_busy_fraction(before, after):
+    """Table-6 analog over a fixed pool: total cost-model busy seconds over
+    pool-size x the busiest engine's busy seconds."""
+    deltas = [a.busy_s - b.busy_s for b, a in zip(before, after)]
+    top = max(deltas)
+    return sum(deltas) / (len(deltas) * top) if top > 0 else 0.0
+
+
+def test_pipeline_runtime_steals_and_beats_pinned_busy_fraction():
+    """ISSUE acceptance: with >=2 engines, a steady-frame ThreadedPipeline
+    run through runtime_scope() reports nonzero steal count and strictly
+    higher aggregate busy fraction than the same workload pinned to a
+    single engine (simulated-PE pool)."""
+    pool = ["F-PE", "S-PE"]
+    engines = [get_engine(n) for n in pool]
+    w = jax.random.normal(jax.random.key(0), (64, 48))
+    frames = [jax.random.normal(jax.random.key(i), (320, 64))
+              for i in range(6)]
+
+    def snap():
+        return [e.telemetry.snapshot() for e in engines]
+
+    # pinned: every GEMM hard-routed to F-PE (PR-1 single-engine dispatch);
+    # TS=32 gives 10 row-panel jobs per frame, deep enough for the tail
+    # guard to let the 0.5x S-PE steal
+    stages = [EngineStage.gemm("mm", w, engine="F-PE", tile=(32, 32, 32)),
+              ("post", lambda y: float(jnp.sum(y)))]
+    b0 = snap()
+    outs, _ = ThreadedPipeline(stages).run(frames)
+    pinned_frac = _agg_busy_fraction(b0, snap())
+    assert len(outs) == len(frames)
+    assert pinned_frac == pytest.approx(1.0 / len(pool))
+
+    # runtime: same stages, same pin — now a queue-affinity hint; the idle
+    # S-PE steals tile jobs from F-PE's deque
+    with SynergyRuntime(pool, name="accept") as rt, rt.scope():
+        b1 = snap()
+        outs, stats = ThreadedPipeline(stages).run(frames)
+        rt_frac = _agg_busy_fraction(b1, snap())
+    assert len(outs) == len(frames)
+    rstats = stats["runtime"]
+    assert rstats is not None and rstats["total_steals"] > 0
+    assert rt_frac > pinned_frac
+    assert rstats["aggregate_busy_fraction"] > 1.0 / len(pool)
+
+
+# --------------------------------------------------- live pool add/remove
+
+def test_add_engine_mid_run_rebalances():
+    slow = _DelayEngine("slow-only", macs_per_s=1e9, seed=1,
+                        max_delay_s=0.01)
+    helper = _DelayEngine("helper", macs_per_s=1e9, seed=2, max_delay_s=0.0)
+    a, b = _ab(24 * 16, 32, 16, seed=7)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime([slow]) as rt:
+        fut = rt.submit_gemm(a, b, jobset=js, tile=(16, 16, 16))
+        rt.add_engine(helper)
+        y = fut.result(120)
+        assert rt.stats()["rebalances"] >= 1
+    assert helper.executed > 0, "added engine never picked up queued work"
+    assert slow.executed + helper.executed == 24
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_remove_engine_mid_run_work_still_completes():
+    doomed = _DelayEngine("doomed", macs_per_s=1e9, seed=3,
+                          max_delay_s=0.01)
+    survivor = _DelayEngine("survivor", macs_per_s=1e9, seed=4,
+                            max_delay_s=0.0)
+    a, b = _ab(24 * 16, 32, 16, seed=8)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime([doomed, survivor]) as rt:
+        fut = rt.submit_gemm(a, b, jobset=js, tile=(16, 16, 16),
+                             affinity="doomed")
+        rt.remove_engine("doomed")
+        y = fut.result(120)
+        assert "doomed" not in rt.engine_names
+    assert fut.execution_counts == [1] * 24
+    assert survivor.executed > 0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_trace_counts_split_gemm_once():
+    """A split GEMM is still ONE gemm: trace gemms sum to len(jobsets)
+    on the runtime path exactly as on the dispatcher path."""
+    a, b = _ab(320, 64, 48, seed=13)
+    tr = SynergyTrace()
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt, rt.scope():
+        with tr.activate():
+            synergy_matmul(a, b, tile=32, name="g0")
+            synergy_matmul(a, b, tile=32, name="g1")
+    assert sum(t.gemms for t in tr.engine_stats.values()) == 2
+    assert sum(t.jobs for t in tr.engine_stats.values()) == tr.num_jobs
+
+
+def test_runtime_scope_is_thread_local():
+    """A scope in one thread must not hijack GEMMs in unrelated threads
+    (explicit engine= pins there keep routing through the dispatcher)."""
+    import threading
+    seen = {}
+
+    def other_thread():
+        seen["runtime"] = current_runtime()
+
+    with SynergyRuntime(["F-PE"]) as rt, rt.scope():
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+        assert current_runtime() is rt
+    assert seen["runtime"] is None
+
+
+def test_stats_totals_survive_engine_removal():
+    """Hot-unplug folds the retired worker's counters into the totals —
+    monitoring never sees total_jobs/total_steals go backwards."""
+    e1 = _DelayEngine("r1", seed=21, max_delay_s=0.002)
+    e2 = _DelayEngine("r2", seed=22, max_delay_s=0.0)
+    a, b = _ab(12 * 16, 32, 16, seed=23)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime([e1, e2]) as rt:
+        rt.submit_gemm(a, b, jobset=js, tile=(16, 16, 16)).result(60)
+        before = rt.stats()
+        assert before["total_jobs"] == 12
+        rt.remove_engine("r1")
+        after = rt.stats()
+    assert after["total_jobs"] == before["total_jobs"]
+    assert after["total_steals"] == before["total_steals"]
+    assert "r1" not in after["engines"]
+
+
+def test_reregister_single_engine_pool_keeps_queued_work():
+    """Swapping the ONLY engine of a follow_registry pool (the registered()
+    shadow pattern) must hand queued jobs to the replacement, not fail
+    them with 'no engines left'."""
+    slow = _DelayEngine("solo-pe", seed=31, max_delay_s=0.01)
+    swap = _DelayEngine("solo-pe", seed=32, max_delay_s=0.0)
+    a, b = _ab(16 * 16, 32, 16, seed=33)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with registered(slow):
+        with SynergyRuntime(["solo-pe"], follow_registry=True) as rt:
+            fut = rt.submit_gemm(a, b, jobset=js, tile=(16, 16, 16))
+            with registered(swap):           # atomic same-name swap
+                y = fut.result(120)
+            assert fut.execution_counts == [1] * 16
+    assert slow.executed + swap.executed == 16
+    assert swap.executed > 0, "replacement engine never ran queued work"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_follow_registry_tracks_register_unregister():
+    """register_engine/unregister_engine mid-run adapt the live pool — the
+    paper's runtime reconfigurability as an API property."""
+    ext = _DelayEngine("hotplug", macs_per_s=5e9, seed=5, max_delay_s=0.0)
+    with SynergyRuntime(["F-PE"], follow_registry=True) as rt:
+        assert rt.engine_names == ["F-PE"]
+        with registered(ext):
+            assert "hotplug" in rt.engine_names
+            a, b = _ab(10 * 32, 48, 32, seed=9)
+            js = JobSet.for_gemm(0, a.shape[0], 32, 48, 32)
+            y = rt.submit_gemm(a, b, jobset=js).result(60)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(jnp.dot(a, b)),
+                                       rtol=1e-4, atol=1e-4)
+        assert "hotplug" not in rt.engine_names
+
+
+# -------------------------------------------------------------- serving
+
+def test_server_routes_jobs_through_runtime():
+    from repro.configs import ARCHS, reduced
+    from repro.core.serving import Request, SynergyServer
+    from repro.models import init_model
+    cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                  n_heads=2, d_ff=64, vocab=128)
+    params = init_model(cfg, jax.random.key(0))
+    with SynergyRuntime(["F-PE", "S-PE"]) as rt:
+        srv = SynergyServer(cfg, params, slots=2, max_len=32,
+                            prefill_len=4, runtime=rt)
+        for i in range(3):
+            srv.submit(Request(i, jax.random.randint(jax.random.key(i),
+                                                     (4,), 0, 128),
+                               max_new_tokens=4))
+        stats = srv.run()
+    assert stats.prefills == 3
+    assert stats.runtime_jobs > 0
+    assert stats.job_busy_s["prefill"] > 0
+    assert stats.job_busy_s["decode"] > 0
+    assert set(stats.job_engine.values()) <= {"F-PE", "S-PE"}
+    assert rt.stats()["total_jobs"] == stats.runtime_jobs
+
+
+# ------------------------------------------------------ DES conformance
+
+def test_simruntime_conforms_to_des_work_stealing():
+    """The virtual-time runtime and simulate(policy='ws') make IDENTICAL
+    steal decisions for identical cost models: per-engine busy seconds
+    (hence job counts) and utilization agree exactly."""
+    js = JobSet.for_gemm(0, 320, 128, 96, 32, name="conv0")
+    net = SimNet("one", (SimLayer("conv0", "conv", jobset=js,
+                                  im2col_bytes=0),))
+    clusters = [Cluster("A", (Accelerator("F-PE0", "F-PE"),)),
+                Cluster("B", (Accelerator("S-PE0", "S-PE"),))]
+    des = simulate(net, clusters, policy="ws", mapping={"conv0": 0},
+                   frames=1, inflight=1, warmup_frames=0)
+    sim = SimRuntime(["F-PE", "S-PE"]).run(js, affinity="F-PE")
+    des_busy = {"F-PE": des.per_cluster_busy["A"] * des.makespan_s,
+                "S-PE": des.per_cluster_busy["B"] * des.makespan_s}
+    for kind in ("F-PE", "S-PE"):
+        assert sim.per_engine_busy[kind] == pytest.approx(des_busy[kind],
+                                                          rel=1e-12)
+    assert sim.makespan_s == pytest.approx(des.makespan_s, rel=1e-12)
+    assert sim.aggregate_busy_fraction == pytest.approx(des.utilization,
+                                                        rel=1e-12)
+    assert sim.total_steals > 0       # the slow engine stole real work
+
+
+def test_steal_policy_is_shared_object():
+    """One policy, three executors: the simulator, the live runtime and
+    SimRuntime must all call the SAME function."""
+    import repro.core.scheduler as sched
+    import repro.soc.policy as policy
+    import repro.soc.runtime as runtime
+    import repro.soc.simrt as simrt
+    assert sched.should_steal is policy.should_steal
+    assert runtime.should_steal is policy.should_steal
+    assert simrt.should_steal is policy.should_steal
+    assert should_steal is policy.should_steal
+    # the tail guard itself
+    assert should_steal(1.0, 1) and should_steal(0.5, 3)
+    assert not should_steal(0.5, 2) and not should_steal(1.0, 0)
+
+
+def test_simruntime_no_affinity_and_empty_jobset():
+    js = JobSet.for_gemm(0, 64, 64, 32, 32)
+    res = SimRuntime(["F-PE", "S-PE"]).run(js)
+    assert sum(res.per_engine_jobs.values()) == js.num_jobs
+    empty = JobSet.for_gemm(0, 0, 0, 0, 32)
+    res0 = SimRuntime(["F-PE"]).run(empty)
+    assert res0.makespan_s == 0.0 and res0.total_steals == 0
