@@ -4,10 +4,15 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract, and dumps
 full rows to a timestamped ``results/benchmarks-<UTC stamp>.json`` (plus a
 ``results/latest.json`` pointer) so successive runs never clobber each
 other.
+
+``--filter SUBSTR`` runs only benchmarks whose name contains SUBSTR;
+``--smoke`` shrinks the simulated frame counts for CI smoke jobs
+(``--filter quant --smoke`` is the CI benchmark-smoke invocation).
 """
 
 from __future__ import annotations
 
+import argparse
 import datetime
 import json
 import os
@@ -18,14 +23,31 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)   # make `benchmarks.*` importable as a script
 
+#: frame count substituted for paper_figs.FRAMES under --smoke
+_SMOKE_FRAMES = 8
 
-def main() -> None:
-    from benchmarks.paper_figs import ALL
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--filter", default="", metavar="SUBSTR",
+                        help="run only benchmarks whose name contains this")
+    parser.add_argument("--smoke", action="store_true",
+                        help="shrink frame counts (CI smoke mode)")
+    args = parser.parse_args(argv)
+
+    from benchmarks import paper_figs
+    if args.smoke:
+        paper_figs.FRAMES = _SMOKE_FRAMES
+    selected = {name: fn for name, fn in paper_figs.ALL.items()
+                if args.filter in name}
+    if not selected:
+        parser.error(f"--filter {args.filter!r} matches no benchmark "
+                     f"(known: {sorted(paper_figs.ALL)})")
 
     os.makedirs("results", exist_ok=True)
     full = {}
     print("name,us_per_call,derived")
-    for name, fn in ALL.items():
+    for name, fn in selected.items():
         t0 = time.perf_counter()
         rows, derived = fn()
         dt_us = (time.perf_counter() - t0) * 1e6
@@ -37,18 +59,21 @@ def main() -> None:
             val = json.dumps(val).replace(",", ";")
         print(f"{name},{dt_us:.0f},{key}={val}")
 
-    # roofline summary (reads results/dryrun if present)
-    try:
-        from benchmarks.roofline import build_table
-        rows = build_table(mesh="16x16")
-        cells = [r for r in rows if "skipped" not in r]
-        if cells:
-            mean_frac = sum(r["roofline_fraction"] for r in cells) / len(cells)
-            full["roofline"] = {"rows": rows}
-            print(f"roofline_16x16,0,mean_fraction={mean_frac:.3f} "
-                  f"over {len(cells)} cells")
-    except Exception as e:  # dry-run not yet executed
-        print(f"roofline_16x16,0,unavailable({type(e).__name__})")
+    # roofline summary (reads results/dryrun if present; a name filter
+    # means a targeted run — skip the cross-cutting summary)
+    if not args.filter:
+        try:
+            from benchmarks.roofline import build_table
+            rows = build_table(mesh="16x16")
+            cells = [r for r in rows if "skipped" not in r]
+            if cells:
+                mean_frac = (sum(r["roofline_fraction"] for r in cells)
+                             / len(cells))
+                full["roofline"] = {"rows": rows}
+                print(f"roofline_16x16,0,mean_fraction={mean_frac:.3f} "
+                      f"over {len(cells)} cells")
+        except Exception as e:  # dry-run not yet executed
+            print(f"roofline_16x16,0,unavailable({type(e).__name__})")
 
     # per-engine telemetry accumulated by the unified dispatch surface AND
     # the work-stealing runtime (same counters the Table-6 metric reads)

@@ -1,0 +1,126 @@
+"""The heterogeneous precision zoo: fp32 + int8 + VPU engines on one chip.
+
+Walks the whole ISSUE-3 subsystem end to end:
+
+  1. calibrate + register an int8 weight-only engine over the XLA backend
+     (and show the registry REFUSING one that misses tolerance);
+  2. precision routing: decode-class GEMMs land on the int8 engine,
+     prefill/train stay on grad-safe full-precision paths, and plain
+     auto-dispatch never silently quantizes;
+  3. serving: a SynergyServer whose decode steps run quantized, with
+     per-precision job counts in ServeStats;
+  4. the throughput claim: a mixed fp32+int8+VPU pool beats the best
+     homogeneous pool on busy-fraction-weighted simulated fps, while the
+     int8 outputs stay inside the calibrated tolerance of the fp32 oracle.
+
+    PYTHONPATH=src python examples/quant_zoo.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.job import JobSet
+from repro.engines import Dispatcher, get_engine, unregister_engine
+from repro.engines.sim import SIM_ENGINE_SPECS, SimPEEngine
+from repro.engines.vpu import NeonVpuEngine
+from repro.quant import (CalibrationError, QuantizedEngine, calibrate,
+                         register_quantized, rel_err)
+from repro.soc import SimRuntime
+
+
+def banner(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main():
+    # --- 1. calibrated registration --------------------------------------
+    banner("calibrate + register")
+    eng = register_quantized("xla", tol=0.05)
+    print(f"registered {eng.name!r}: {eng.calibration}")
+    try:
+        register_quantized("xla", name="impossible-int8", tol=1e-9)
+    except CalibrationError as e:
+        print(f"refused past tolerance: {type(e).__name__}: "
+              f"{str(e).split(':')[0]} ...")
+
+    # --- 2. precision routing --------------------------------------------
+    banner("job-class routing")
+    js = JobSet.for_gemm(0, 8, 256, 64, 32, name="decode-step")
+    d = Dispatcher()
+    for cls in (None, "decode", "prefill", "train"):
+        picked = d.select(js, job_class=cls)
+        print(f"  job_class={str(cls):<8} -> {picked.name}")
+
+    # --- 3. serving with quantized decode --------------------------------
+    banner("SynergyServer: quantized decode steps")
+    from repro.configs import ARCHS, reduced
+    from repro.core.serving import Request, SynergyServer
+    from repro.models import init_model
+    cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                  n_heads=2, d_ff=64, vocab=128)
+    params = init_model(cfg, jax.random.key(0))
+    srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4)
+    for i in range(3):
+        srv.submit(Request(i, jax.random.randint(jax.random.key(i), (4,),
+                                                 0, 128), max_new_tokens=6))
+    stats = srv.run()
+    print(f"  routed: {stats.job_engine}")
+    print(f"  per-precision tile jobs: {stats.precision_jobs}")
+    unregister_engine(eng.name)
+
+    # --- 4. mixed pool vs best homogeneous pool --------------------------
+    banner("mixed fp32+int8+VPU pool (virtual time)")
+    fp32 = SimPEEngine("zoo-fp32", SIM_ENGINE_SPECS["F-PE"])
+    int8 = QuantizedEngine(fp32, name="zoo-int8")
+    vpu = NeonVpuEngine("zoo-vpu", interpret=True,
+                        cost=SIM_ENGINE_SPECS["NEON"])
+    report = calibrate(int8, tol=0.05)
+    frames = [JobSet.for_gemm(i, 128, 256, 64, 32, name=f"decode{i}")
+              for i in range(16)]
+
+    def run_pool(engines):
+        makespan, fracs = 0.0, 0.0
+        for js in frames:
+            res = SimRuntime(engines).run(js)
+            makespan += res.makespan_s
+            fracs += res.aggregate_busy_fraction
+        fps = len(frames) / makespan
+        return fps, fps * fracs / len(frames)
+
+    results = {}
+    for name, pool in [("fp32-only", [fp32]), ("int8-only", [int8]),
+                       ("vpu-only", [vpu]), ("mixed", [fp32, int8, vpu])]:
+        fps, wfps = run_pool(pool)
+        results[name] = wfps
+        print(f"  {name:<10} {fps:7.1f} fps  "
+              f"{wfps:7.1f} busy-fraction-weighted fps")
+    best_homog = max(v for k, v in results.items() if k != "mixed")
+    gain = results["mixed"] / best_homog
+    print(f"  mixed pool vs best homogeneous: {gain:.2f}x "
+          f"({'WINS' if gain > 1 else 'loses'})")
+
+    # the accuracy side of the trade: int8 decode output vs fp32 oracle,
+    # measured with the same formula the calibration gate uses
+    ka, kb = jax.random.split(jax.random.key(1))
+    a = jax.random.normal(ka, (4, 64))
+    w = jax.random.normal(kb, (64, 256)) * 0.05
+    rel = rel_err(int8.execute(a, w), fp32.execute(a, w))
+    print(f"  int8 decode rel err vs fp32 oracle: {rel:.2e} "
+          f"(calibrated tol {report.tol:g}) -> "
+          f"{'within tolerance' if rel <= report.tol else 'OUT OF TOLERANCE'}")
+
+    # --- 5. the VPU kernel is real compute --------------------------------
+    banner("NeonVpuEngine: MXU-free Pallas kernel (interpret off-TPU)")
+    y = get_engine("neon-vpu").execute(a, w, tile=(16, 16, 16))
+    ref = get_engine("reference").execute(a, w)
+    print(f"  vpu_mm matches oracle: "
+          f"{bool(jnp.allclose(y, ref, rtol=1e-4, atol=1e-4))}")
+
+    assert gain > 1.0 and rel <= report.tol
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.engines import Dispatcher, Engine
+from repro.engines import CAP_INT8, Dispatcher, Engine, find_engine
 
 from .job import JobSet
 
@@ -105,6 +105,11 @@ class ServeStats:
     #: job class -> engine name the dispatcher (or the runtime's dominant
     #: executor) last routed it to
     job_engine: dict = dataclasses.field(default_factory=dict)
+    #: tile jobs per PRECISION class of the engine that executed them
+    #: (int8 = CAP_INT8 quantized engines; fp32 = everything else) — the
+    #: serving-visible face of the precision-routing policy
+    precision_jobs: dict = dataclasses.field(
+        default_factory=lambda: {"int8": 0, "fp32": 0})
     #: runtime mode only: tile jobs executed / stolen across the pool
     runtime_jobs: int = 0
     runtime_steals: int = 0
@@ -177,16 +182,25 @@ class SynergyServer:
         return self.stats
 
     # ------------------------------------------------------------ internals
+    @staticmethod
+    def _precision_class(engine: Optional[Engine]) -> str:
+        return ("int8" if engine is not None
+                and CAP_INT8 in engine.capabilities else "fp32")
+
     def _account(self, job) -> Optional[Engine]:
         """Route the job class' JobSet: through the runtime (tile jobs
         submitted, stolen, booked per executing engine) when one is
-        attached, else whole to the dispatcher's pick."""
+        attached, else whole to the dispatcher's pick.  Either way the
+        precision-routing policy applies — ``job.kind`` is the dispatcher
+        job class, so DECODE steps land on registered int8 engines while
+        prefill stays on grad-safe full-precision paths — and per-precision
+        job counts land in ``ServeStats.precision_jobs``."""
         js = job.jobset()
         if self.runtime is not None:
-            # queue-affinity hint: seed on the dispatcher's choice, let
-            # idle engines steal the tiles
+            # queue-affinity hint: seed on the policy's choice (int8 for
+            # decode when one is registered), let idle engines steal tiles
             try:
-                hint = self.dispatcher.select(js).name
+                hint = self.dispatcher.select(js, job_class=job.kind).name
             except RuntimeError:
                 hint = None
             fut = self.runtime.submit(js, affinity=hint)
@@ -197,15 +211,22 @@ class SynergyServer:
             if acct:
                 dominant = max(acct, key=lambda n: acct[n]["jobs"])
                 self.stats.job_engine[job.kind] = dominant
+            for name, a in acct.items():
+                # pool engines need not be registry entries: resolve from
+                # the runtime's live pool first, the registry second
+                eng = self.runtime.find_engine(name) or find_engine(name)
+                self.stats.precision_jobs[self._precision_class(eng)] \
+                    += a["jobs"]
             self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
             self.stats.runtime_steals += sum(a["steals"]
                                              for a in acct.values())
             return None
-        eng = self.dispatcher.select(js)
+        eng = self.dispatcher.select(js, job_class=job.kind)
         est = eng.estimate(js)
         eng.telemetry.record(js, est)
         self.stats.job_busy_s[job.kind] += est
         self.stats.job_engine[job.kind] = eng.name
+        self.stats.precision_jobs[self._precision_class(eng)] += js.num_jobs
         return eng
 
     def _slot_positions(self) -> jnp.ndarray:

@@ -38,7 +38,7 @@ from typing import Callable, Optional, Union
 
 import jax
 
-from repro.engines import (Engine, Telemetry, current_scope_engine,
+from repro.engines import (CAP_GRAD, Engine, Telemetry, current_scope_engine,
                            dispatch_gemm)
 
 from .job import JobSet
@@ -112,6 +112,35 @@ def current_trace() -> Optional[SynergyTrace]:
     return getattr(_state, "trace", None)
 
 
+def _under_grad_trace(*arrays) -> bool:
+    """True when any operand is being traced for differentiation (JVP
+    tracers — ``jax.grad``/``vjp``/``jvp``/``linearize`` all route through
+    forward mode).  This is the dispatch-level guard that keeps CAP_GRAD-
+    free engines (int8 quantized: round/clip kill the weight gradient;
+    Pallas kernels without a VJP rule) off differentiated GEMMs even when
+    no call site asked for grad-safety explicitly.
+
+    Limitation: ``grad(jit(f))`` differentiates the *jaxpr* of ``f``
+    outside this trace, where only jit tracers are visible — jitted
+    training steps should pass ``job_class='train'`` (which requires
+    CAP_GRAD) at the call site."""
+    pending = [x for x in arrays if x is not None]
+    while pending:
+        x = pending.pop()
+        if not isinstance(x, jax.core.Tracer):
+            continue
+        names = (type(x).__name__, type(getattr(x, "_trace", x)).__name__)
+        if any("jvp" in n.lower() for n in names):
+            return True
+        # descend through wrapping tracers: JVP carries primal/tangent,
+        # vmap's BatchTracer wraps its inner (possibly JVP) tracer in .val
+        for attr in ("primal", "tangent", "val"):
+            sub = getattr(x, attr, None)
+            if sub is not None:
+                pending.append(sub)
+    return False
+
+
 def _resolve_impl_shim(impl: Optional[str],
                        engine: Union[str, Engine, None]):
     """Translate the legacy ``impl`` string into an engine lookup."""
@@ -136,13 +165,18 @@ def synergy_matmul(a: jax.Array, b: jax.Array, *,
                    name: str = "",
                    engine: Union[str, Engine, None] = None,
                    impl: str | None = None,
+                   job_class: str | None = None,
                    out_dtype=None,
                    precision=None) -> jax.Array:
     """C = act(A @ B + bias) through the Synergy tile-job abstraction.
 
     a: (..., m, k); b: (k, n).  ``engine``: a registered engine name (or
     instance); None lets the dispatcher rank capable engines by cost model.
-    ``impl`` is the deprecated string spelling of the same choice.
+    ``job_class``: one of :data:`repro.engines.JOB_CLASSES` ("decode",
+    "prefill", "train") applying the precision-routing policy — decode
+    prefers registered ``int8`` engines, prefill/train require grad-safe
+    full-precision paths.  ``impl`` is the deprecated string spelling of
+    the engine choice.
     """
     *lead, m, k = a.shape
     k2, n = b.shape
@@ -150,6 +184,11 @@ def synergy_matmul(a: jax.Array, b: jax.Array, *,
     engine = _resolve_impl_shim(impl, engine)
     if engine is None:
         engine = current_scope_engine()   # engine_scope() pin, if any
+
+    # grad guard: a GEMM being differentiated may only land on CAP_GRAD
+    # engines, whatever the job class said (an int8 pin under jax.grad is
+    # a hard error, not a silent zero-gradient).
+    require = (CAP_GRAD,) if _under_grad_trace(a, b, bias) else ()
 
     batch = 1
     for d in lead:
@@ -168,17 +207,23 @@ def synergy_matmul(a: jax.Array, b: jax.Array, *,
     from repro.soc.runtime import current_runtime, is_concrete
     rt = current_runtime()
     if rt is not None and is_concrete(a, b, bias):
+        # precision routing under a runtime scope happens INSIDE the
+        # split (per-job int8 eligibility + LPT over the pool), so no
+        # dispatcher ranking pass is needed here — only an explicit
+        # engine pin survives as a queue-affinity hint
         affinity = engine.name if isinstance(engine, Engine) else engine
         a2 = a.reshape(-1, k)
         y, accounting = rt.run_matmul(
             js, a2, b, bias=bias, activation=activation,
             tile=tile if isinstance(tile, tuple) else (tile,) * 3,
-            out_dtype=out_dtype, precision=precision, affinity=affinity)
+            out_dtype=out_dtype, precision=precision, affinity=affinity,
+            job_class=job_class)
         if tr is not None:
             tr.record_runtime(accounting)
         return y.reshape(*lead, m, n)
 
-    eng = dispatch_gemm(js, engine=engine)
+    eng = dispatch_gemm(js, engine=engine, require=require,
+                        job_class=job_class)
     est_s = eng.estimate(js)
     eng.telemetry.record(js, est_s)
     if tr is not None:

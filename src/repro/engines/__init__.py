@@ -14,12 +14,14 @@ One registry, one dispatch surface, every backend:
     register_engine(MyEngine())   # every GEMM call site can now route here
 
 Importing this package registers the built-in engines (``xla``,
-``pallas``, ``reference``) and the calibrated simulated Zynq PEs
-(``F-PE``, ``S-PE``, ``NEON``, ``ARM``) exactly once.
+``pallas``, ``reference``, the VPU-only ``neon-vpu``) and the calibrated
+simulated Zynq PEs (``F-PE``, ``S-PE``, ``NEON``, ``ARM``) exactly once.
+Quantized int8 variants join on demand via
+``repro.quant.register_quantized``.
 """
 
-from .base import (CAP_EPILOGUE, CAP_GEMM, CAP_GRAD, CAP_INTERPRET,
-                   CAP_ORACLE, CAP_SIM, CAP_TILED, CostModel, Engine,
+from .base import (CAP_EPILOGUE, CAP_GEMM, CAP_GRAD, CAP_INT8, CAP_INTERPRET,
+                   CAP_ORACLE, CAP_SIM, CAP_TILED, CAP_VPU, CostModel, Engine,
                    Telemetry)
 from .registry import (OpVariant, add_registry_listener, find_engine,
                        get_engine, list_engines, op_variants,
@@ -28,27 +30,30 @@ from .registry import (OpVariant, add_registry_listener, find_engine,
                        unregister_engine)
 from .builtin import PallasTiledEngine, ReferenceEngine, XlaEngine
 from .sim import SIM_ENGINE_SPECS, SimPEEngine, make_sim_engines
-from .dispatch import (DEFAULT_DISPATCHER, Dispatcher, current_scope_engine,
-                       dispatch_gemm, engine_scope)
+from .vpu import NeonVpuEngine
+from .dispatch import (DEFAULT_DISPATCHER, JOB_CLASSES, Dispatcher,
+                       JobClassPolicy, current_scope_engine, dispatch_gemm,
+                       engine_scope)
 
 __all__ = [
     "Engine", "CostModel", "Telemetry",
     "CAP_GEMM", "CAP_EPILOGUE", "CAP_GRAD", "CAP_TILED", "CAP_INTERPRET",
-    "CAP_SIM", "CAP_ORACLE",
+    "CAP_SIM", "CAP_ORACLE", "CAP_INT8", "CAP_VPU",
     "register_engine", "unregister_engine", "get_engine", "find_engine",
     "list_engines", "registered",
     "add_registry_listener", "remove_registry_listener",
     "OpVariant", "register_op_impl", "resolve_op", "op_variants",
-    "XlaEngine", "PallasTiledEngine", "ReferenceEngine",
+    "XlaEngine", "PallasTiledEngine", "ReferenceEngine", "NeonVpuEngine",
     "SimPEEngine", "SIM_ENGINE_SPECS", "make_sim_engines",
     "Dispatcher", "DEFAULT_DISPATCHER", "dispatch_gemm",
     "engine_scope", "current_scope_engine",
+    "JobClassPolicy", "JOB_CLASSES",
 ]
 
 
 def _register_defaults() -> None:
     for eng in (XlaEngine(), PallasTiledEngine(), ReferenceEngine(),
-                *make_sim_engines()):
+                NeonVpuEngine(), *make_sim_engines()):
         if find_engine(eng.name) is None:
             register_engine(eng)
 

@@ -24,6 +24,10 @@ advertising every required capability.  The core vocabulary:
   ``interpret`` Pallas target that can also run in interpret mode off-TPU
   ``sim``       cost-model-only paper PE (executes via the XLA oracle)
   ``oracle``    numerical reference; never auto-selected for speed
+  ``int8``      int8 weight-only quantized path (low precision, high rate;
+                NOT grad-safe — round/clip kill the weight gradient)
+  ``vpu``       vector-unit-only execution (no MXU) — the TPU analog of
+                the paper's NEON SIMD cores
 """
 
 from __future__ import annotations
@@ -37,7 +41,7 @@ from typing import Callable, Optional
 __all__ = [
     "CostModel", "Telemetry", "Engine",
     "CAP_GEMM", "CAP_EPILOGUE", "CAP_GRAD", "CAP_TILED", "CAP_INTERPRET",
-    "CAP_SIM", "CAP_ORACLE",
+    "CAP_SIM", "CAP_ORACLE", "CAP_INT8", "CAP_VPU",
 ]
 
 CAP_GEMM = "gemm"
@@ -47,6 +51,8 @@ CAP_TILED = "tiled"
 CAP_INTERPRET = "interpret"
 CAP_SIM = "sim"
 CAP_ORACLE = "oracle"
+CAP_INT8 = "int8"
+CAP_VPU = "vpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +203,23 @@ class Engine(abc.ABC):
     def available(self) -> bool:
         """Whether the engine can run on the current backend right now."""
         return True
+
+    def recalibrate(self, observed_macs_per_s: float,
+                    alpha: float = 0.5) -> float:
+        """EMA-blend a measured MAC rate into this engine's cost model
+        (steal-aware recalibration: the runtime feeds measured
+        ``wall_busy_s`` back so LPT seeding adapts to observed speed).
+        The blend starts from the CURRENT effective model (stored or
+        backend-computed) and persists in ``_cost``; builtin engines with
+        dynamic cost properties honor the stored model once set.  Returns
+        the rate now in effect."""
+        if observed_macs_per_s <= 0:
+            return self.cost.macs_per_s
+        current = self.cost
+        blended = ((1.0 - alpha) * current.macs_per_s
+                   + alpha * observed_macs_per_s)
+        self._cost = dataclasses.replace(current, macs_per_s=blended)
+        return blended
 
     def supports(self, required) -> bool:
         return frozenset(required) <= self.capabilities

@@ -42,6 +42,8 @@ class XlaEngine(Engine):
 
     @property
     def cost(self) -> CostModel:
+        if self._cost is not None:       # steal-aware recalibration applied
+            return self._cost
         return CostModel(self._RATES.get(jax.default_backend(), 2e9))
 
     def execute(self, a, b, *, bias=None, activation: Callable | None = None,
@@ -69,6 +71,8 @@ class PallasTiledEngine(Engine):
 
     @property
     def cost(self) -> CostModel:
+        if self._cost is not None:       # steal-aware recalibration applied
+            return self._cost
         if jax.default_backend() == "tpu":
             return CostModel(90e12)
         return CostModel(2e6)   # interpreter: auto-dispatch never picks it

@@ -10,14 +10,16 @@ call-site edits.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Iterable, Iterator, Optional, Union
 
-from .base import CAP_GEMM, CAP_SIM, Engine
+from .base import CAP_GEMM, CAP_GRAD, CAP_INT8, CAP_SIM, Engine
 from .registry import get_engine, list_engines
 
 __all__ = ["Dispatcher", "DEFAULT_DISPATCHER", "dispatch_gemm",
-           "engine_scope", "current_scope_engine"]
+           "engine_scope", "current_scope_engine",
+           "JobClassPolicy", "JOB_CLASSES"]
 
 _scope = threading.local()
 
@@ -40,35 +42,85 @@ def current_scope_engine() -> Union[str, Engine, None]:
     return getattr(_scope, "engine", None)
 
 
+@dataclasses.dataclass(frozen=True)
+class JobClassPolicy:
+    """Precision-routing policy for one job class.
+
+    ``require``: hard capability filter (candidates lacking any are out).
+    ``prefer``:  soft filter — if any candidate advertises every preferred
+    capability, selection ranks only those; otherwise it falls back to the
+    full candidate set (a pool with no int8 engine still serves decode).
+    """
+
+    require: frozenset = frozenset()
+    prefer: frozenset = frozenset()
+
+
+#: the precision-routing table (paper §3 job classes, serving-era names):
+#: decode steps are small, memory-bound and error-tolerant — trade
+#: precision for rate when an int8 engine is registered.  Prefill feeds
+#: the KV cache every later token reads, and training differentiates the
+#: GEMM, so both are pinned to grad-safe full-precision paths.  NOTE:
+#: CAP_GRAD is a deliberately conservative full-precision proxy — it also
+#: keeps prefill off grad-FREE fp32 kernels (Pallas MXU/VPU engines);
+#: deployments that trust those for prefill can relax the table
+#: (JOB_CLASSES["prefill"] is plain data, not policy machinery).
+JOB_CLASSES: dict[str, JobClassPolicy] = {
+    "decode": JobClassPolicy(prefer=frozenset({CAP_INT8})),
+    "prefill": JobClassPolicy(require=frozenset({CAP_GRAD})),
+    "train": JobClassPolicy(require=frozenset({CAP_GRAD})),
+}
+
+
 class Dispatcher:
     """Capability-filtered, cost-ranked engine selection.
 
     ``require``: capabilities every candidate must advertise.
     ``exclude``: capabilities that disqualify a candidate from AUTO
-    selection (simulated PEs by default — they model a 0.1 GMAC/s Zynq
-    fabric and would never win, but excluding them keeps auto-dispatch
-    semantics independent of what simulators are registered).
+    selection — simulated PEs (they model a 0.1 GMAC/s Zynq fabric and
+    would never win, but excluding them keeps auto-dispatch semantics
+    independent of what simulators are registered) and int8 quantized
+    engines (their cost models beat fp32 peers, so cost ranking alone
+    would silently trade away precision process-wide; a job class that
+    prefers or requires ``int8`` lifts the exclusion, and an explicit
+    ``engine=`` pin bypasses it entirely).
     """
 
     def __init__(self, require: Iterable[str] = (CAP_GEMM,),
-                 exclude: Iterable[str] = (CAP_SIM,)):
+                 exclude: Iterable[str] = (CAP_SIM, CAP_INT8)):
         self.require = frozenset(require)
         self.exclude = frozenset(exclude)
 
-    def candidates(self, require: Iterable[str] = ()) -> list[Engine]:
+    def candidates(self, require: Iterable[str] = (),
+                   exclude: Optional[frozenset] = None) -> list[Engine]:
         req = self.require | frozenset(require)
+        exc = self.exclude if exclude is None else exclude
         return [e for e in list_engines()
-                if e.supports(req) and not (e.capabilities & self.exclude)
+                if e.supports(req) and not (e.capabilities & exc)
                 and e.available()]
 
     def select(self, jobset, *, engine: Union[str, Engine, None] = None,
-               require: Iterable[str] = ()) -> Engine:
+               require: Iterable[str] = (),
+               job_class: Optional[str] = None) -> Engine:
         """Pick the engine for one JobSet.
 
         An explicit ``engine`` (name or instance) bypasses ranking but is
         still capability-checked; otherwise the cheapest capable candidate
-        by cost-model estimate wins."""
-        req = self.require | frozenset(require)
+        by cost-model estimate wins.  ``job_class`` applies the precision
+        routing policy in :data:`JOB_CLASSES`: its ``require`` set becomes
+        a hard filter (checked even against an explicit engine), and its
+        ``prefer`` set narrows auto-selection when any candidate offers it
+        (decode prefers ``int8``; prefill/train require ``grad``)."""
+        if job_class is None:
+            policy = _NO_POLICY
+        else:
+            try:
+                policy = JOB_CLASSES[job_class]
+            except KeyError:
+                raise KeyError(
+                    f"unknown job class {job_class!r}; known: "
+                    f"{sorted(JOB_CLASSES)}") from None
+        req = self.require | frozenset(require) | policy.require
         if engine is not None:
             eng = get_engine(engine) if isinstance(engine, str) else engine
             if not eng.supports(req):
@@ -76,17 +128,27 @@ class Dispatcher:
                 raise ValueError(f"engine {eng.name!r} lacks required "
                                  f"capabilities {missing}")
             return eng
-        cands = self.candidates(require)
+        # a capability the caller/policy asks for cannot also disqualify
+        exc = self.exclude - policy.prefer - req
+        cands = self.candidates(req - self.require, exclude=exc)
         if not cands:
             raise RuntimeError(
                 f"no registered engine satisfies capabilities {sorted(req)}")
+        if policy.prefer:
+            preferred = [e for e in cands if policy.prefer <= e.capabilities]
+            if preferred:
+                cands = preferred
         return min(cands, key=lambda e: e.estimate(jobset))
 
+
+_NO_POLICY = JobClassPolicy()
 
 DEFAULT_DISPATCHER = Dispatcher()
 
 
 def dispatch_gemm(jobset, *, engine: Union[str, Engine, None] = None,
-                  require: Iterable[str] = ()) -> Engine:
+                  require: Iterable[str] = (),
+                  job_class: Optional[str] = None) -> Engine:
     """Module-level shorthand for ``DEFAULT_DISPATCHER.select``."""
-    return DEFAULT_DISPATCHER.select(jobset, engine=engine, require=require)
+    return DEFAULT_DISPATCHER.select(jobset, engine=engine, require=require,
+                                     job_class=job_class)

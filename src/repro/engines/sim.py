@@ -52,6 +52,13 @@ class SimPEEngine(Engine):
         super().__init__(name, {CAP_GEMM, CAP_EPILOGUE, CAP_SIM}
                          | set(capabilities), cost=cost)
 
+    def recalibrate(self, observed_macs_per_s: float,
+                    alpha: float = 0.5) -> float:
+        """No-op: this cost model is the PAPER's calibrated constant for
+        hardware that is not actually here — a measured host-oracle rate
+        would corrupt every DES/LPT/Table-6 result that reads it."""
+        return self.cost.macs_per_s
+
     def execute(self, a, b, *, bias=None, activation: Callable | None = None,
                 tile=(256, 256, 256), out_dtype=None, precision=None):
         from repro.kernels.tiled_mm.ref import tiled_mm_ref

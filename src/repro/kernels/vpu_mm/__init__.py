@@ -1,0 +1,7 @@
+"""vpu_mm — VPU-only (MXU-free) Pallas tiled matmul, the NEON analog."""
+
+from .ops import vpu_matmul
+from .ref import vpu_mm_ref
+from .vpu_mm import vpu_mm_pallas
+
+__all__ = ["vpu_matmul", "vpu_mm_ref", "vpu_mm_pallas"]

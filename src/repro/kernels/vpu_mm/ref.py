@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the vpu_mm kernel.
+
+Mirrors the kernel's semantics — fp32 rank-1 accumulation over k — but
+vectorized as a single fp32 contraction: summation order differs from the
+kernel's sequential loop only within fp32 rounding, which is what the
+conformance tests' tolerances cover (same contract as tiled_mm's oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def vpu_mm_ref(a: jax.Array, b: jax.Array, *,
+               bias: jax.Array | None = None,
+               activation: Callable | None = None,
+               out_dtype=None) -> jax.Array:
+    y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = activation(y)
+    return y.astype(out_dtype or a.dtype)

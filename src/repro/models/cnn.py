@@ -84,7 +84,8 @@ def init_cnn(cfg: CNNConfig, key: jax.Array, dtype=jnp.float32) -> dict:
     return params
 
 
-def _conv_via_jobs(x, w, b, stride, pad, tile, name, engine=None):
+def _conv_via_jobs(x, w, b, stride, pad, tile, name, engine=None,
+                   job_class=None):
     """CONV -> im2col -> synergy_matmul (tile jobs) -> bias+relu epilogue."""
     kh, kw, cin, cout = w.shape
     n, h, wd, _ = x.shape
@@ -92,17 +93,22 @@ def _conv_via_jobs(x, w, b, stride, pad, tile, name, engine=None):
     a = im2col(x, kh, kw, stride, pad).reshape(n * oh * ow, kh * kw * cin)
     y = synergy_matmul(a, w.reshape(-1, cout), bias=b,
                        activation=jax.nn.relu, tile=tile, name=name,
-                       engine=engine)
+                       engine=engine, job_class=job_class)
     return y.reshape(n, oh, ow, cout)
 
 
 def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
                 engine: str | None = None,
+                job_class: str | None = None,
                 runtime=None) -> jax.Array:
     """x: (N, H, W, Cin) -> logits (N, num_classes).
 
     ``engine``: pin every GEMM to a registered engine; None lets the
     dispatcher rank capable engines per GEMM (the default).
+    ``job_class``: precision-routing policy for every GEMM
+    (:data:`repro.engines.JOB_CLASSES`) — ``"decode"`` prefers registered
+    int8 engines (error-tolerant inference), ``"train"`` requires
+    grad-safe full-precision paths.
     ``runtime``: a :class:`repro.soc.SynergyRuntime` — every CONV/FC GEMM
     is split across its engine pool and balanced by work stealing (with
     ``engine`` demoted to a queue-affinity hint).  Don't combine with
@@ -114,18 +120,20 @@ def cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
     else:
         scope = contextlib.nullcontext()
     with scope:
-        return _cnn_forward(cfg, params, x, engine=engine)
+        return _cnn_forward(cfg, params, x, engine=engine,
+                            job_class=job_class)
 
 
 def _cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
-                 engine: str | None = None) -> jax.Array:
+                 engine: str | None = None,
+                 job_class: str | None = None) -> jax.Array:
     shapes, _ = cfg.trace_shapes()
     for i, (spec, *_rest) in enumerate(shapes):
         if spec[0] == "conv":
             _, cout, k, s, p = spec
             x = _conv_via_jobs(x, params[f"conv{i}_w"], params[f"conv{i}_b"],
                                s, p, cfg.tile, f"{cfg.name}/conv{i}",
-                               engine=engine)
+                               engine=engine, job_class=job_class)
         elif spec[0] == "pool":
             size = spec[1]
             n, h, w, c = x.shape
@@ -138,7 +146,8 @@ def _cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
             act = None if last else jax.nn.relu
             x = synergy_matmul(x, params[f"fc{i}_w"], bias=params[f"fc{i}_b"],
                                activation=act, tile=cfg.tile,
-                               name=f"{cfg.name}/fc{i}", engine=engine)
+                               name=f"{cfg.name}/fc{i}", engine=engine,
+                               job_class=job_class)
     return x
 
 

@@ -7,9 +7,11 @@ biases and embeddings' scales attached; ``QuantizedLinear`` application is
 `(x @ q.astype(bf16)) * scale` — the dequant multiplier fuses into the
 matmul epilogue on TPU.
 
-The dry-run's `--set param_dtype=int8` models the same traffic without the
-scale plumbing; this module is the numerically-correct version, validated
-by tests/test_quant.py roundtrip + end-to-end logits-drift bounds.
+The NUMERIC core lives in :mod:`repro.quant.quantize` (the quantized-
+engine subsystem); this module is the param-tree view of the same scheme,
+plus the tuple-based API the serving path predates.  The dry-run's
+`--set param_dtype=int8` models the same traffic without the scale
+plumbing; tests/test_quant.py validates roundtrip + logits-drift bounds.
 """
 
 from __future__ import annotations
@@ -17,17 +19,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.quant.quantize import quantize_weights as _quantize_weights
+
 __all__ = ["quantize_weight", "dequantize_weight", "quantize_params",
            "quant_matmul"]
 
 
 def quantize_weight(w: jax.Array):
     """w (..., d_in, d_out) -> (q int8, scale (..., 1, d_out) f32)."""
-    w32 = w.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(w32), axis=-2, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    qw = _quantize_weights(w)
+    return qw.q, qw.scale
 
 
 def dequantize_weight(q: jax.Array, scale: jax.Array,

@@ -1,0 +1,36 @@
+"""``repro.quant`` — the int8 quantized-engine subsystem.
+
+Three layers, mirroring how the paper treats its accelerators:
+
+  * :mod:`repro.quant.quantize`  — the numeric scheme (symmetric
+    per-output-channel int8 weights, fp32 dequant epilogue).
+  * :mod:`repro.quant.engine`    — :class:`QuantizedEngine`, which adapts
+    any CAP_GEMM engine into a CAP_GRAD-free ``int8`` registry entry with
+    a higher calibrated rate.
+  * :mod:`repro.quant.calibrate` — measured error vs the fp32 oracle;
+    :func:`register_quantized` refuses engines past tolerance.
+
+Typical serving setup::
+
+    from repro.quant import register_quantized
+    register_quantized("xla", tol=0.05)   # 'xla-int8' joins the registry
+    # decode-class jobs now prefer the int8 engine (Dispatcher policy);
+    # prefill/training stay on CAP_GRAD full-precision paths.
+"""
+
+from .quantize import (QuantizedWeight, dequant_epilogue, dequant_finish,
+                       dequantize_weights, quant_gemm, quantization_error,
+                       quantize_weights)
+from .engine import INT8_SPEEDUP, QuantizedEngine
+from .calibrate import (DEFAULT_SHAPES, DEFAULT_TOL, CalibrationError,
+                        CalibrationReport, calibrate, register_quantized,
+                        rel_err)
+
+__all__ = [
+    "QuantizedWeight", "quantize_weights", "dequantize_weights",
+    "dequant_epilogue", "dequant_finish", "quant_gemm",
+    "quantization_error",
+    "QuantizedEngine", "INT8_SPEEDUP",
+    "CalibrationError", "CalibrationReport", "DEFAULT_SHAPES", "DEFAULT_TOL",
+    "calibrate", "register_quantized", "rel_err",
+]

@@ -1,0 +1,127 @@
+"""Calibration: measure a quantized engine's error against the fp32 oracle
+and refuse registration past tolerance.
+
+The paper's engines are trusted because they are *calibrated* — rate
+constants measured on hardware back every scheduling decision.  The
+quantized family extends that discipline to numerics: before an int8
+engine may enter the registry, it must demonstrate, per GEMM shape, that
+its output stays within a configured relative tolerance of the fp32
+reference.  The resulting :class:`CalibrationReport` travels with the
+engine (``engine.calibration``) so dispatch policies and serving stats can
+cite the bound they are trading against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.engines.base import CostModel, Engine
+from repro.engines.registry import register_engine
+
+from .engine import INT8_SPEEDUP, QuantizedEngine
+
+__all__ = ["CalibrationError", "CalibrationReport", "DEFAULT_SHAPES",
+           "calibrate", "register_quantized", "rel_err"]
+
+#: (m, k, n) GEMM shapes spanning the serving mix: tiny memory-bound
+#: decode steps up to prefill/CNN-sized panels (border shapes included)
+DEFAULT_SHAPES: tuple[tuple[int, int, int], ...] = (
+    (1, 64, 64),       # single-token decode
+    (4, 128, 256),     # batched decode
+    (33, 70, 45),      # border tiles in every dimension
+    (128, 256, 128),   # prefill / conv panel
+)
+
+#: default max relative error vs the fp32 oracle (per-channel symmetric
+#: int8 on well-scaled weights lands well under this)
+DEFAULT_TOL = 0.05
+
+
+class CalibrationError(ValueError):
+    """Raised when a quantized engine exceeds the error tolerance."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    """Quant-error metadata: per-shape relative error vs the fp32 oracle."""
+
+    engine: str
+    base: str
+    tol: float
+    rows: tuple[dict, ...]            # {"m", "k", "n", "rel_err"}
+    max_rel_err: float
+
+    @property
+    def passed(self) -> bool:
+        return self.max_rel_err <= self.tol
+
+    def __str__(self) -> str:
+        worst = max(self.rows, key=lambda r: r["rel_err"])
+        return (f"CalibrationReport({self.engine}: max_rel_err="
+                f"{self.max_rel_err:.2e} @ {worst['m']}x{worst['k']}x"
+                f"{worst['n']}, tol={self.tol:g}, "
+                f"{'PASS' if self.passed else 'FAIL'})")
+
+
+def rel_err(got: jax.Array, want: jax.Array) -> float:
+    """Max relative error vs a reference — the ONE formula both the
+    calibration gate and the acceptance benchmarks measure with."""
+    got32 = got.astype(jnp.float32)
+    want32 = want.astype(jnp.float32)
+    denom = float(jnp.max(jnp.abs(want32))) + 1e-12
+    return float(jnp.max(jnp.abs(got32 - want32))) / denom
+
+
+def calibrate(engine: Engine, *,
+              shapes=DEFAULT_SHAPES, tol: float = DEFAULT_TOL,
+              seed: int = 0) -> CalibrationReport:
+    """Run ``engine`` over random GEMMs of each shape and compare against
+    the fp32 oracle.  Pure measurement — registration gating happens in
+    :func:`register_quantized`."""
+    from repro.kernels.tiled_mm.ref import tiled_mm_ref
+    rows = []
+    key = jax.random.key(seed)
+    for m, k, n in shapes:
+        key, ka, kb = jax.random.split(key, 3)
+        a = jax.random.normal(ka, (m, k), jnp.float32)
+        w = jax.random.normal(kb, (k, n), jnp.float32) * 0.05
+        want = tiled_mm_ref(a, w)
+        got = engine.execute(a, w, tile=(32, 32, 32))
+        rows.append({"m": m, "k": k, "n": n, "rel_err": rel_err(got, want)})
+    report = CalibrationReport(
+        engine=engine.name,
+        base=getattr(getattr(engine, "base", None), "name", engine.name),
+        tol=tol, rows=tuple(rows),
+        max_rel_err=max(r["rel_err"] for r in rows))
+    if isinstance(engine, QuantizedEngine) or hasattr(engine, "calibration"):
+        engine.calibration = report
+    return report
+
+
+def register_quantized(base: Engine | str, *,
+                       name: str | None = None,
+                       speedup: float = INT8_SPEEDUP,
+                       cost: CostModel | None = None,
+                       shapes=DEFAULT_SHAPES, tol: float = DEFAULT_TOL,
+                       seed: int = 0,
+                       override: bool = False) -> QuantizedEngine:
+    """Wrap ``base`` as an int8 engine, calibrate it, and register it —
+    REFUSING registration if the measured error exceeds ``tol``.
+
+        eng = register_quantized("xla")        # 'xla-int8' joins the pool
+
+    The attached :class:`CalibrationReport` is the engine's quant-error
+    metadata; ``unregister_engine(eng.name)`` retires it as usual."""
+    from repro.engines.registry import get_engine
+    if isinstance(base, str):
+        base = get_engine(base)
+    eng = QuantizedEngine(base, name=name, speedup=speedup, cost=cost)
+    report = calibrate(eng, shapes=shapes, tol=tol, seed=seed)
+    if not report.passed:
+        raise CalibrationError(
+            f"refusing to register {eng.name!r}: max relative error "
+            f"{report.max_rel_err:.3e} exceeds tolerance {tol:g} ({report})")
+    return register_engine(eng, override=override)

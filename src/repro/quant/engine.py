@@ -1,0 +1,121 @@
+"""QuantizedEngine — adapt any CAP_GEMM engine into an int8 weight-only
+variant.
+
+The wrapper is what makes the engine pool *genuinely* heterogeneous: the
+same physical backend shows up twice in the registry, once at full
+precision and once as a CAP_GRAD-free ``int8`` engine with a higher
+calibrated MAC rate (weight-only quantization is a bandwidth play — int8
+weights stream at 1 byte/elem, which is the roofline limiter for the
+small memory-bound GEMMs of decode).  The dispatcher's job-class policy
+and the SynergyRuntime then trade precision for throughput per job class.
+
+Capability surgery on wrap:
+
+  * ``+ int8``     — the dispatcher's decode policy prefers these.
+  * ``- grad``     — round/clip have zero gradient almost everywhere, so a
+    quantized path silently kills weight gradients; dropping CAP_GRAD (and
+    the guard in ``synergy_matmul``) keeps training traffic off it.
+  * ``- oracle``   — a lossy engine is never a numerical reference.
+  * ``- epilogue`` — the wrapper applies dequant -> bias -> activation as
+    a separate pass over C (see execute), so the "fused, no extra HBM
+    trip" promise the capability stands for does not hold here.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable
+
+import jax
+
+from repro.engines.base import (CAP_EPILOGUE, CAP_GRAD, CAP_INT8,
+                                CAP_ORACLE, CostModel, Engine)
+
+from .quantize import QuantizedWeight, quantize_weights
+
+__all__ = ["QuantizedEngine", "INT8_SPEEDUP"]
+
+#: default calibrated rate advantage of the int8 path over its fp32 base.
+#: Weight-only int8 reads weights at 1/4 the fp32 bytes; decode GEMMs are
+#: weight-bandwidth-bound, so the sustained rate scales close to 4x.
+INT8_SPEEDUP = 4.0
+
+#: weight-cache capacity (decode reuses the same handful of weights every
+#: step; 32 covers every layer of the reduced zoo configs)
+_CACHE_SLOTS = 32
+
+
+class QuantizedEngine(Engine):
+    """Int8 weight-only view of a wrapped full-precision engine.
+
+    ``execute`` quantizes ``b`` per output channel (cached by array
+    identity — decode calls reuse the same weights every step), runs the
+    raw ``a @ q`` on the BASE engine at fp32 output precision, then
+    applies dequant scale -> bias -> activation at the wrapper level.
+    The epilogue deliberately stays OUTSIDE the base engine: a tiled base
+    (Pallas kernels) runs its epilogue per (ts_m, ts_n) block, where a
+    full-width ``(n,)`` multiplicative scale cannot broadcast — folding
+    the dequant into the base's activation hook would crash any CAP_TILED
+    backend.  Costs one unfused epilogue pass over C; the int8 weight
+    stream (the bandwidth win) is unaffected.
+
+    ``calibration`` is attached by :func:`repro.quant.calibrate.calibrate`
+    / ``register_quantized`` — the quant-error metadata that travels with
+    the cost model."""
+
+    def __init__(self, base: Engine, *, name: str | None = None,
+                 speedup: float = INT8_SPEEDUP,
+                 cost: CostModel | None = None):
+        caps = (base.capabilities
+                - {CAP_GRAD, CAP_ORACLE, CAP_EPILOGUE}) | {CAP_INT8}
+        super().__init__(name or f"{base.name}-int8", caps,
+                         cost=cost or base.cost.scaled(speedup))
+        self.base = base
+        self.speedup = speedup
+        #: CalibrationReport once calibrated (quant-error metadata)
+        self.calibration = None
+        # identity-keyed LRU: holding the key array alive guarantees its
+        # id() cannot be reused while the entry exists
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self._cache_lock = threading.Lock()
+
+    def available(self) -> bool:
+        return self.base.available()
+
+    # ------------------------------------------------------------- weights
+    def quantized(self, b: jax.Array) -> QuantizedWeight:
+        """Quantize (or fetch the cached quantization of) one weight."""
+        if isinstance(b, jax.core.Tracer):
+            return quantize_weights(b)     # never cache trace-time values
+        key = id(b)
+        with self._cache_lock:
+            hit = self._cache.get(key)
+            if hit is not None and hit[0] is b:
+                self._cache.move_to_end(key)
+                return hit[1]
+        qw = quantize_weights(b)
+        with self._cache_lock:
+            self._cache[key] = (b, qw)
+            self._cache.move_to_end(key)
+            while len(self._cache) > _CACHE_SLOTS:
+                self._cache.popitem(last=False)
+        return qw
+
+    # ------------------------------------------------------------- execute
+    def execute(self, a, b, *, bias=None, activation: Callable | None = None,
+                tile=(256, 256, 256), out_dtype=None, precision=None):
+        import jax.numpy as jnp
+
+        from .quantize import dequant_finish
+        qw = self.quantized(b)
+        acc = self.base.execute(
+            a, qw.q.astype(a.dtype), bias=None, activation=None,
+            tile=tile, out_dtype=jnp.float32, precision=precision)
+        return dequant_finish(acc, qw, bias=bias, activation=activation,
+                              out_dtype=out_dtype or a.dtype)
+
+    def __repr__(self) -> str:
+        caps = ",".join(sorted(self.capabilities))
+        return (f"<QuantizedEngine {self.name!r} base={self.base.name!r} "
+                f"[{caps}]>")

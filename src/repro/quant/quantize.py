@@ -1,0 +1,126 @@
+"""Symmetric per-channel int8 weight quantization — the numeric core of the
+quantized engine family.
+
+The scheme is the standard weight-only one (NEURAghe-style CPU/FPGA splits
+and the mobile-SoC heterogeneity studies both lean on it): weights of a
+GEMM ``A[m, k] @ W[k, n]`` quantize along the contraction axis with one
+fp32 scale per output channel, activations stay in floating point, and the
+dequant multiplier is applied as a *fused epilogue* after the int8 weights
+are read — so the weight stream costs 1 byte/element of bandwidth, which
+is where the decode-time speedup comes from.
+
+Symmetric means the zero point is identically 0; the container still
+carries it so asymmetric schemes can slot in without changing consumers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantizedWeight", "quantize_weights", "dequantize_weights",
+           "dequant_epilogue", "dequant_finish", "quant_gemm",
+           "quantization_error"]
+
+#: int8 symmetric range: round-to-nearest lands within scale/2 per element
+_QMAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    """One quantized GEMM weight: ``w ~= (q - zero_point) * scale``.
+
+    ``q``          int8, same shape as the source weight (k, n).
+    ``scale``      fp32 (1, n) — one scale per output channel.
+    ``zero_point`` int32 (1, n) — identically 0 for the symmetric scheme.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    zero_point: jax.Array
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.q.shape
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.nbytes + self.scale.nbytes + self.zero_point.nbytes
+
+    @property
+    def error_bound(self) -> float:
+        """Per-element worst-case reconstruction error: round-to-nearest
+        symmetric int8 is off by at most scale/2."""
+        return float(jnp.max(self.scale)) / 2.0
+
+
+def quantize_weights(w: jax.Array) -> QuantizedWeight:
+    """w (k, n) -> symmetric per-output-channel int8 (quantize along k)."""
+    w32 = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w32), axis=-2, keepdims=True) / _QMAX
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w32 / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    zp = jnp.zeros_like(scale, dtype=jnp.int32)
+    return QuantizedWeight(q=q, scale=scale, zero_point=zp)
+
+
+def dequantize_weights(qw: QuantizedWeight, dtype=jnp.float32) -> jax.Array:
+    return ((qw.q.astype(jnp.float32) - qw.zero_point.astype(jnp.float32))
+            * qw.scale).astype(dtype)
+
+
+def dequant_epilogue(acc: jax.Array, qw: QuantizedWeight) -> jax.Array:
+    """Fold the per-channel scale into an fp32 GEMM accumulator:
+    ``(a @ q) * scale == a @ (q * scale)`` because the scale is constant
+    along the contraction axis."""
+    return acc * qw.scale.reshape(1, -1).astype(jnp.float32)
+
+
+def dequant_finish(acc: jax.Array, qw: QuantizedWeight, *,
+                   bias: jax.Array | None = None,
+                   activation: Callable | None = None,
+                   out_dtype) -> jax.Array:
+    """The ONE epilogue tail every quantized path shares (the standalone
+    ``quant_gemm`` and ``QuantizedEngine.execute`` must stay numerically
+    identical): dequant scale -> bias -> activation -> final cast, all
+    in fp32 until the cast."""
+    y = dequant_epilogue(acc, qw)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = activation(y)
+    return y.astype(out_dtype)
+
+
+def quant_gemm(a: jax.Array, qw: QuantizedWeight, *,
+               bias: jax.Array | None = None,
+               activation: Callable | None = None,
+               out_dtype=None) -> jax.Array:
+    """act(A @ dequant(q) + bias) with the dequant applied as an epilogue:
+    the int8 weights enter the dot at activation dtype (1 byte/elem read),
+    accumulation happens in fp32, then scale -> bias -> activation."""
+    acc = jax.lax.dot_general(
+        a, qw.q.astype(a.dtype),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return dequant_finish(acc, qw, bias=bias, activation=activation,
+                          out_dtype=out_dtype or a.dtype)
+
+
+def quantization_error(w: jax.Array, qw: QuantizedWeight | None = None) -> dict:
+    """Reconstruction-error metrics of one weight (the calibration module
+    aggregates these per GEMM shape)."""
+    if qw is None:
+        qw = quantize_weights(w)
+    deq = dequantize_weights(qw, dtype=jnp.float32)
+    err = jnp.abs(deq - w.astype(jnp.float32))
+    denom = float(jnp.max(jnp.abs(w))) + 1e-12
+    return {
+        "max_abs_err": float(jnp.max(err)),
+        "max_rel_err": float(jnp.max(err)) / denom,
+        "mean_abs_err": float(jnp.mean(err)),
+        "error_bound": qw.error_bound,
+    }

@@ -40,7 +40,8 @@ from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 import jax
 
-from repro.engines.base import CAP_GEMM, Engine
+from repro.engines.base import CAP_GEMM, CAP_INT8, CAP_SIM, Engine
+from repro.engines.dispatch import JOB_CLASSES
 from repro.engines.registry import (add_registry_listener, get_engine,
                                     remove_registry_listener)
 
@@ -52,6 +53,21 @@ __all__ = ["SynergyRuntime", "RuntimeFuture", "runtime_scope",
 #: idle-book wait quantum.  Wakeups are notify-driven (submit / pool change
 #: / shutdown all notify_all); the timeout is only a lost-wakeup backstop.
 _IDLE_WAIT_S = 0.5
+
+
+def _admits_int8(job_class: Optional[str]) -> bool:
+    """Whether a job class opts into int8 engines (the dispatcher's
+    precision policy, read here so runtime splits honor the same
+    opt-in invariant).  Unknown classes raise — a typo must not silently
+    drop the routing the caller asked for."""
+    if job_class is None:
+        return False
+    try:
+        policy = JOB_CLASSES[job_class]
+    except KeyError:
+        raise KeyError(f"unknown job class {job_class!r}; known: "
+                       f"{sorted(JOB_CLASSES)}") from None
+    return CAP_INT8 in (policy.prefer | policy.require)
 
 
 # ---------------------------------------------------------------------------
@@ -91,18 +107,29 @@ class _RuntimeJob:
     """One schedulable unit: ``n_jobs`` identical tile jobs of a submission.
 
     ``fn(engine) -> part`` does the actual compute (None = accounting-only);
-    ``index`` is the merge slot."""
+    ``index`` is the merge slot.  ``stealable=False`` pins the job to the
+    queue it was seeded on — used for real-array splits over MIXED-precision
+    pools, where a steal would nondeterministically swap an fp32 panel for
+    an int8 one (accounting-only jobs always steal freely).  ``int8_ok``
+    carries the caller's precision opt-in ON the job, so every placement
+    path — seed, steal, rebalance, engine removal, hotplug — enforces it:
+    a job that never opted into int8 cannot land on a CAP_INT8 worker, no
+    matter how the pool changes after submission."""
 
-    __slots__ = ("sub", "index", "fn", "n_jobs", "job_macs", "job_bytes")
+    __slots__ = ("sub", "index", "fn", "n_jobs", "job_macs", "job_bytes",
+                 "stealable", "int8_ok")
 
     def __init__(self, sub: "_Submission", index: int, fn, n_jobs: int,
-                 job_macs: int, job_bytes: int):
+                 job_macs: int, job_bytes: int, stealable: bool = True,
+                 int8_ok: bool = True):
         self.sub = sub
         self.index = index
         self.fn = fn
         self.n_jobs = n_jobs
         self.job_macs = job_macs
         self.job_bytes = job_bytes
+        self.stealable = stealable
+        self.int8_ok = int8_ok
 
 
 class _Submission:
@@ -164,6 +191,9 @@ class _Worker:
         self.est_busy_s = 0.0
         self.wall_busy_s = 0.0
         self.idle_s = 0.0
+        # recalibration window (zeroed by SynergyRuntime.recalibrate)
+        self.cal_macs = 0
+        self.cal_wall_s = 0.0
 
     @property
     def rate(self) -> float:
@@ -282,6 +312,13 @@ class SynergyRuntime:
         with self._lock:
             return list(self._workers)
 
+    def find_engine(self, name: str) -> Optional[Engine]:
+        """The live pool member under ``name`` (pool engines need not be
+        in the process registry — accounting consumers resolve here)."""
+        with self._lock:
+            w = self._workers.get(name)
+            return w.engine if w is not None else None
+
     def add_engine(self, engine: Union[str, Engine]) -> None:
         """Bring an engine online mid-run; queued work rebalances onto it."""
         eng = get_engine(engine) if isinstance(engine, str) else engine
@@ -298,7 +335,10 @@ class SynergyRuntime:
     def remove_engine(self, name: str) -> bool:
         """Retire an engine mid-run; its queued jobs move to survivors (the
         in-flight job, if any, finishes on the retiring engine, and its
-        counters fold into the runtime totals)."""
+        counters fold into the runtime totals).  Orphans keep their
+        precision eligibility: an fp32-only panel re-seeds onto
+        full-precision survivors, and FAILS its submission if none remain
+        (see ``_seed_locked``) rather than silently quantizing."""
         with self._cond:
             w = self._workers.pop(name, None)
             if w is None:
@@ -351,12 +391,18 @@ class SynergyRuntime:
             self.remove_engine(engine.name)
 
     def _rebalance_locked(self) -> None:
-        """Gather every queued (unstarted) job and re-seed proportional to
-        the current pool's cost-model rates."""
+        """Gather every queued (unstarted) STEALABLE job and re-seed
+        proportional to the current pool's cost-model rates.  Precision-
+        pinned panels (mixed-pool splits) stay on the queue the LPT seed
+        chose — a hotplug mid-GEMM must not silently move an fp32 panel
+        onto an int8 engine.  (A REMOVED engine's pinned orphans do
+        migrate — see remove_engine — there is no engine left to honor.)"""
         pending: list[_RuntimeJob] = []
         for w in self._workers.values():
-            pending.extend(w.queue)
+            pinned = [j for j in w.queue if not j.stealable]
+            pending.extend(j for j in w.queue if j.stealable)
             w.queue.clear()
+            w.queue.extend(pinned)
         if pending:
             self._seed_locked(pending, affinity=None)
         self._rebalances += 1
@@ -364,30 +410,51 @@ class SynergyRuntime:
     # --------------------------------------------------------- scheduling
     def _seed_locked(self, jobs: Sequence[_RuntimeJob],
                      affinity: Optional[str]) -> None:
-        if affinity is not None and affinity in self._workers:
-            self._workers[affinity].queue.extend(jobs)
-            return
-        # LPT-style seed (§3.1.1): greedily place each job on the worker
-        # with the smallest projected finish time; stealing fixes the rest.
+        """Seed jobs with per-job precision eligibility: a job whose
+        ``int8_ok`` is False never lands on a CAP_INT8 worker (the
+        dispatcher's opt-in invariant, enforced at the queue level so
+        rebalances and removals preserve it too).  A job with NO eligible
+        worker fails its submission instead of crashing the seed."""
         workers = list(self._workers.values())
+        is_int8 = [CAP_INT8 in w.engine.capabilities for w in workers]
         loads = [sum(j.n_jobs * w.job_time(j.job_macs, j.job_bytes)
                      for j in w.queue) for w in workers]
         for job in jobs:
-            times = [w.job_time(job.job_macs, job.job_bytes) * job.n_jobs
-                     for w in workers]
-            i = min(range(len(workers)), key=lambda i: loads[i] + times[i])
-            loads[i] += times[i]
-            workers[i].queue.append(job)
+            idxs = [i for i in range(len(workers))
+                    if job.int8_ok or not is_int8[i]]
+            if not idxs:
+                job.sub.complete(
+                    job, "<unplaceable>", None,
+                    RuntimeError("no precision-eligible engine in the pool "
+                                 "for this job"), 0.0, False)
+                continue
+            ai = next((i for i in idxs
+                       if workers[i].engine.name == affinity), None)
+            if ai is None:
+                # LPT-style seed (§3.1.1): smallest projected finish time
+                # among eligible workers; stealing fixes the rest
+                ai = min(idxs, key=lambda i: loads[i]
+                         + workers[i].job_time(job.job_macs, job.job_bytes)
+                         * job.n_jobs)
+            loads[ai] += (workers[ai].job_time(job.job_macs, job.job_bytes)
+                          * job.n_jobs)
+            workers[ai].queue.append(job)
 
     def _try_steal_locked(self, thief: _Worker):
-        """The stealer: busiest victim queue, shared tail-guard policy,
-        steal from the TAIL (victims pop their own head)."""
-        names = [n for n in self._workers if n != thief.engine.name]
+        """The stealer: busiest VIABLE victim queue, shared tail-guard
+        policy, steal from the TAIL (victims pop their own head).  A queue
+        whose tail job is precision-pinned (mixed-pool panel), or whose
+        tail the THIEF may not run (int8 thief, non-opted-in job), is not
+        viable — but other queues still are, so interleaved accounting
+        traffic keeps stealing even while a pinned split is in flight."""
+        thief_int8 = CAP_INT8 in thief.engine.capabilities
+        names = [n for n, w in self._workers.items()
+                 if n != thief.engine.name and w.queue
+                 and w.queue[-1].stealable
+                 and (w.queue[-1].int8_ok or not thief_int8)]
         if not names:
             return None
         lens = [len(self._workers[n].queue) for n in names]
-        if not any(lens):
-            return None
         victim = self._workers[names[pick_victim(lens)]]
         fastest = max(w.rate for w in self._workers.values())
         rel = thief.rate / fastest if fastest > 0 else 1.0
@@ -434,7 +501,10 @@ class SynergyRuntime:
         t0 = time.perf_counter()
         try:
             if job.fn is not None:
-                part = job.fn(eng)
+                # block on async dispatch: an unrealized jax.Array returns
+                # in ~µs and would make the measured (recalibration) rate
+                # orders of magnitude too high on real backends
+                part = jax.block_until_ready(job.fn(eng))
         except BaseException as e:
             err = e
         dt = time.perf_counter() - t0
@@ -443,6 +513,12 @@ class SynergyRuntime:
         w.steals += int(stolen)
         w.est_busy_s += est
         w.wall_busy_s += dt
+        if job.fn is not None:
+            # recalibration window: only REAL compute measures a rate —
+            # accounting-only jobs finish in ~0 wall time at full MACs and
+            # would blow the observed rate sky-high
+            w.cal_macs += job.n_jobs * job.job_macs
+            w.cal_wall_s += dt
         eng.telemetry.record_jobs(job.n_jobs, est, job.n_jobs * job.job_bytes,
                                   steals=int(stolen))
         eng.telemetry.record_runtime(wall_busy_s=dt)
@@ -464,11 +540,14 @@ class SynergyRuntime:
             eng.telemetry.record_jobs(0, 0.0, 0, gemms=1)
 
     def _submit_jobs(self, jobset, units: list[tuple], merge,
-                     affinity: Optional[str]) -> RuntimeFuture:
+                     affinity: Optional[str],
+                     stealable: bool = True,
+                     int8_ok: bool = True) -> RuntimeFuture:
         """units: list of (fn, n_jobs, job_macs, job_bytes)."""
         sub = _Submission(jobset, len(units), merge,
                           on_done=self._on_submission_done)
-        jobs = [_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes)
+        jobs = [_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes, stealable,
+                            int8_ok)
                 for i, (fn, n_jobs, macs, nbytes) in enumerate(units)]
         with self._cond:
             if not self._started:
@@ -501,20 +580,38 @@ class SynergyRuntime:
 
     def submit_gemm(self, a, b, *, jobset, bias=None, activation=None,
                     tile=(256, 256, 256), out_dtype=None, precision=None,
-                    affinity: Optional[str] = None) -> RuntimeFuture:
+                    affinity: Optional[str] = None,
+                    job_class: Optional[str] = None) -> RuntimeFuture:
         """Split one GEMM's tile jobs across the pool as row panels; the
-        future's result is the merged ``act(A @ B + bias)``."""
+        future's result is the merged ``act(A @ B + bias)``.
+
+        Dequant-aware accumulation: every panel executes at fp32 output
+        precision (a quantized engine's dequant epilogue lands in fp32)
+        and the requested ``out_dtype`` is applied ONCE to the merged
+        result, so mixed fp32/int8 partials never round twice.
+
+        Precision is OPT-IN, matching the dispatcher's invariant: unless
+        ``job_class`` admits int8 (decode), every panel carries
+        ``int8_ok=False`` and can never be placed on a CAP_INT8 worker —
+        at seed time, by a steal, by a hotplug rebalance, or on engine
+        removal.  Mixed-pool panels are additionally pinned to the
+        deterministic LPT seed (stealable=False) — stealing a panel
+        across precision classes would make the merged numerics a
+        function of thread timing.  Accounting-only ``submit`` traffic
+        (serving proxies) keeps stealing across the whole pool."""
         import jax.numpy as jnp
         ts_m = jobset.ts_m
         m = a.shape[0]
         gm, gn = jobset.grid
         j = next(jobset.jobs())
+        final_dtype = out_dtype or a.dtype
 
         def make_fn(r0: int, r1: int):
             def fn(eng: Engine):
                 return eng.execute(a[r0:r1], b, bias=bias,
                                    activation=activation, tile=tile,
-                                   out_dtype=out_dtype, precision=precision)
+                                   out_dtype=jnp.float32,
+                                   precision=precision)
             return fn
 
         units = []
@@ -523,21 +620,72 @@ class SynergyRuntime:
             units.append((make_fn(r0, r1), gn, j.macs, j.bytes_moved))
 
         def merge(parts: list):
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            return y.astype(final_dtype)
 
-        return self._submit_jobs(jobset, units, merge, affinity)
+        int8_ok = _admits_int8(job_class)
+        # the mixed check and the enqueue must be one atomic step: a
+        # hotplug between them would enqueue stealable panels into a
+        # now-mixed pool and break the determinism pin (the Condition's
+        # underlying RLock makes the nested acquire in _submit_jobs safe)
+        with self._cond:
+            mixed = self._mixed_precision_pool()
+            return self._submit_jobs(jobset, units, merge,
+                                     None if mixed else affinity,
+                                     stealable=not mixed, int8_ok=int8_ok)
+
+    def _mixed_precision_pool(self) -> bool:
+        """True when the live pool mixes int8 and full-precision engines
+        (numerics then depend on which engine runs which panel)."""
+        with self._lock:
+            classes = {CAP_INT8 in w.engine.capabilities
+                       for w in self._workers.values()}
+        return len(classes) > 1
 
     def run_matmul(self, jobset, a, b, *, bias=None, activation=None,
                    tile=(256, 256, 256), out_dtype=None, precision=None,
                    affinity: Optional[str] = None,
+                   job_class: Optional[str] = None,
                    timeout: float = 300.0):
         """Blocking ``submit_gemm`` — what ``synergy_matmul`` calls under a
         :func:`runtime_scope`.  Returns (result, accounting)."""
         fut = self.submit_gemm(a, b, jobset=jobset, bias=bias,
                                activation=activation, tile=tile,
                                out_dtype=out_dtype, precision=precision,
-                               affinity=affinity)
+                               affinity=affinity, job_class=job_class)
         return fut.result(timeout), fut.accounting
+
+    # ----------------------------------------------------- recalibration
+    def recalibrate(self, alpha: float = 0.5, *,
+                    min_wall_s: float = 1e-4) -> dict[str, float]:
+        """Steal-aware cost recalibration: fold each worker's MEASURED
+        rate (MACs executed / wall seconds busy, real compute only) back
+        into its engine's ``CostModel.macs_per_s`` via an EMA.
+
+        LPT seeding, steal tail-guards and dispatcher ranking all read the
+        cost model, so a mis-calibrated engine (cost says fast, hardware
+        says slow) stops being over-seeded after a few windows — the
+        planning analog of what the straggler rebalancer already does for
+        SPMD shares.  Each call consumes the measurement window opened by
+        the previous one.  CAP_SIM engines are never touched: their cost
+        models are the PAPER's calibrated constants and their execute is a
+        host-side oracle, so a measured host rate would corrupt every DES
+        and planner result.  Returns ``{engine: macs_per_s now in
+        effect}`` for the workers that had enough signal."""
+        updated: dict[str, float] = {}
+        with self._lock:
+            windows = [(w, w.cal_macs, w.cal_wall_s)
+                       for w in self._workers.values()]
+            for w, _, _ in windows:
+                w.cal_macs = 0
+                w.cal_wall_s = 0.0
+        for w, macs, wall_s in windows:
+            if (wall_s < min_wall_s or macs <= 0
+                    or CAP_SIM in w.engine.capabilities):
+                continue
+            updated[w.engine.name] = w.engine.recalibrate(macs / wall_s,
+                                                          alpha)
+        return updated
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:

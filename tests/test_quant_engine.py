@@ -1,0 +1,438 @@
+"""repro.quant: the int8 quantized-engine subsystem.
+
+Covers the numeric scheme (per-channel symmetric roundtrip bound), the
+QuantizedEngine wrapper (oracle agreement, capability surgery, weight
+cache), calibration gating (refusal past tolerance), the dispatcher's
+precision-routing policy (decode prefers int8, auto/plain dispatch never
+silently quantizes, grad tracing never lands on a CAP_GRAD-free engine),
+deterministic split/merge over mixed-precision runtime pools, steal-aware
+cost recalibration, and serving's per-precision job accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.job import JobSet
+from repro.core.synergy_mm import SynergyTrace, synergy_matmul
+from repro.engines import (CAP_GEMM, CAP_GRAD, CAP_INT8, CostModel,
+                           Dispatcher, Engine, get_engine, registered)
+from repro.engines.sim import SIM_ENGINE_SPECS, SimPEEngine
+from repro.quant import (CalibrationError, QuantizedEngine, calibrate,
+                         dequantize_weights, quant_gemm, quantize_weights,
+                         register_quantized)
+from repro.soc import SynergyRuntime
+
+
+def _ab(m, k, n, seed=0, wscale=0.05):
+    ka, kb = jax.random.split(jax.random.key(seed))
+    return (jax.random.normal(ka, (m, k)),
+            jax.random.normal(kb, (k, n)) * wscale)
+
+
+# --------------------------------------------------------------- numerics
+
+def test_quantize_roundtrip_error_bound():
+    w = jax.random.normal(jax.random.key(0), (96, 40)) * 0.2
+    qw = quantize_weights(w)
+    assert qw.q.dtype == jnp.int8
+    assert qw.scale.shape == (1, 40)
+    assert float(jnp.max(jnp.abs(qw.zero_point))) == 0.0   # symmetric
+    deq = dequantize_weights(qw)
+    # per-channel bound: |err| <= that channel's scale / 2
+    err = jnp.abs(deq - w)
+    assert bool(jnp.all(err <= qw.scale / 2 + 1e-7))
+    assert float(jnp.max(err)) <= qw.error_bound + 1e-7
+
+
+def test_quant_gemm_close_to_fp32():
+    a, w = _ab(16, 64, 24, seed=1)
+    qw = quantize_weights(w)
+    y = quant_gemm(a, qw, bias=jnp.ones((24,)), activation=jax.nn.relu)
+    ref = get_engine("reference").execute(a, w, bias=jnp.ones((24,)),
+                                          activation=jax.nn.relu)
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------- engine
+
+def test_quantized_engine_wraps_and_strips_grad():
+    base = get_engine("xla")
+    q = QuantizedEngine(base)
+    assert q.name == "xla-int8"
+    assert CAP_INT8 in q.capabilities
+    assert CAP_GRAD not in q.capabilities
+    assert q.cost.macs_per_s == pytest.approx(
+        base.cost.macs_per_s * q.speedup)
+    a, w = _ab(33, 70, 45, seed=2)        # border shapes
+    bias = jax.random.normal(jax.random.key(5), (45,))
+    y = q.execute(a, w, bias=bias, activation=jax.nn.relu, tile=(32, 32, 32))
+    ref = get_engine("reference").execute(a, w, bias=bias,
+                                          activation=jax.nn.relu)
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("base_name", ["pallas", "neon-vpu"])
+def test_quantized_engine_over_tiled_bases(base_name):
+    """Regression: the dequant epilogue must live OUTSIDE the base engine
+    — folding the full-width (n,) scale into a tiled base's per-block
+    activation hook crashes whenever n > ts_n."""
+    q = QuantizedEngine(get_engine(base_name), name=f"{base_name}-q")
+    a, w = _ab(8, 64, 48, seed=12)        # n=48 > ts_n=16
+    bias = jax.random.normal(jax.random.key(13), (48,))
+    y = q.execute(a, w, bias=bias, activation=jax.nn.relu, tile=(16, 16, 16))
+    ref = get_engine("reference").execute(a, w, bias=bias,
+                                          activation=jax.nn.relu)
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_quantized_engine_caches_weights_by_identity():
+    q = QuantizedEngine(get_engine("xla"))
+    _, w = _ab(8, 32, 16, seed=3)
+    qw1 = q.quantized(w)
+    qw2 = q.quantized(w)
+    assert qw1 is qw2                     # identity hit, no requantization
+    _, w2 = _ab(8, 32, 16, seed=4)
+    assert q.quantized(w2) is not qw1
+
+
+# ----------------------------------------------------------- calibration
+
+def test_calibrate_attaches_report():
+    q = QuantizedEngine(get_engine("xla"))
+    report = calibrate(q, tol=0.05)
+    assert q.calibration is report
+    assert report.passed and report.max_rel_err < 0.05
+    assert len(report.rows) >= 4 and "PASS" in str(report)
+
+
+def test_register_quantized_refuses_past_tolerance():
+    from repro.engines import find_engine
+    with pytest.raises(CalibrationError):
+        register_quantized("xla", name="never-lands", tol=1e-9)
+    assert find_engine("never-lands") is None   # refusal = no registration
+
+
+def test_register_quantized_registers_and_unregisters():
+    from repro.engines import find_engine, unregister_engine
+    eng = register_quantized("xla", name="tmp-int8", tol=0.05)
+    try:
+        assert find_engine("tmp-int8") is eng
+        assert eng.calibration is not None and eng.calibration.passed
+    finally:
+        unregister_engine("tmp-int8")
+
+
+# ------------------------------------------------------ dispatch routing
+
+def test_auto_dispatch_never_silently_quantizes():
+    """A registered int8 engine must not win PLAIN auto-dispatch on cost
+    alone — precision loss is opt-in via job class or explicit pin."""
+    js = JobSet.for_gemm(0, 64, 64, 64, 32)
+    q = QuantizedEngine(get_engine("xla"), name="fast-int8")
+    with registered(q):
+        assert Dispatcher().select(js).name != "fast-int8"
+        assert Dispatcher().select(js, job_class="decode").name == "fast-int8"
+        assert Dispatcher().select(js, engine="fast-int8") is q
+        # prefill/train require grad-safety: int8 is structurally out
+        assert CAP_GRAD not in Dispatcher().select(
+            js, job_class="decode").capabilities
+        for cls in ("prefill", "train"):
+            assert CAP_GRAD in Dispatcher().select(
+                js, job_class=cls).capabilities
+
+
+def test_decode_class_falls_back_without_int8_engines():
+    js = JobSet.for_gemm(0, 64, 64, 64, 32)
+    eng = Dispatcher().select(js, job_class="decode")
+    assert CAP_INT8 not in eng.capabilities   # graceful: best fp32 engine
+
+
+# ------------------------------------------------------------ grad guard
+
+class _GradFreeMock(Engine):
+    """Implausibly fast CAP_GRAD-free engine: without the trace guard,
+    auto-dispatch would route differentiated GEMMs here."""
+
+    def __init__(self, name="gradfree-mock"):
+        super().__init__(name, {CAP_GEMM, "epilogue"},
+                         cost=CostModel(macs_per_s=1e18))
+        self.calls = 0
+
+    def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                out_dtype=None, precision=None):
+        self.calls += 1
+        return jnp.zeros((a.shape[0], b.shape[1]), a.dtype)  # poisoned
+
+
+def test_grad_trace_never_selects_grad_free_engine():
+    """Regression (ISSUE 3 satellite): under jax.grad the dispatcher must
+    require CAP_GRAD even though the grad-free mock ranks cheapest."""
+    a, w = _ab(8, 16, 12, seed=6, wscale=1.0)
+    mock = _GradFreeMock()
+    with registered(mock):
+        tr = SynergyTrace()
+        with tr.activate():
+            g = jax.grad(
+                lambda b: jnp.sum(synergy_matmul(a, b, tile=8)))(w)
+        assert "gradfree-mock" not in tr.engine_stats
+        assert mock.calls == 0
+        assert bool(jnp.any(g != 0))          # real gradient, not poisoned
+        # outside grad the mock IS the auto pick (the guard is the only
+        # thing standing between it and differentiated GEMMs)
+        tr2 = SynergyTrace()
+        with tr2.activate():
+            synergy_matmul(a, w, tile=8)
+        assert set(tr2.engine_stats) == {"gradfree-mock"}
+
+
+def test_grad_of_vmap_never_selects_grad_free_engine():
+    """Regression: vmap's BatchTracer wraps the JVP tracer in ``.val`` —
+    the guard must see through it, or per-example gradients land on
+    grad-free engines."""
+    a, w = _ab(4, 8, 6, seed=15, wscale=1.0)
+    mock = _GradFreeMock(name="gradfree-vmap")
+    with registered(mock):
+        def loss(a):
+            return jnp.sum(jax.vmap(
+                lambda row: synergy_matmul(row[None, :], w, tile=8))(a))
+        g = jax.grad(loss)(a)
+        assert mock.calls == 0
+        assert bool(jnp.any(g != 0))
+
+
+def test_grad_trace_rejects_explicit_int8_pin():
+    a, w = _ab(8, 16, 12, seed=7)
+    q = QuantizedEngine(get_engine("xla"), name="pin-int8")
+    with registered(q):
+        with pytest.raises(ValueError, match="grad"):
+            jax.grad(lambda b: jnp.sum(
+                synergy_matmul(a, b, tile=8, engine="pin-int8")))(w)
+
+
+# ------------------------------------------- mixed-precision runtime pool
+
+def _mixed_pool(seed=0):
+    fp32 = SimPEEngine(f"mp-fp32-{seed}", SIM_ENGINE_SPECS["F-PE"])
+    int8 = QuantizedEngine(fp32, name=f"mp-int8-{seed}")
+    return fp32, int8
+
+
+def test_mixed_pool_split_is_deterministic():
+    """Real-array splits over a mixed fp32+int8 pool pin panels to the
+    deterministic LPT seed (stealing across precision classes would make
+    the merged numerics a function of thread timing)."""
+    fp32, int8 = _mixed_pool()
+    a, w = _ab(20 * 16, 40, 24, seed=8)
+    js = JobSet.for_gemm(0, a.shape[0], 24, 40, 16)
+    outs = []
+    for trial in range(3):
+        with SynergyRuntime([fp32, int8], name=f"det{trial}") as rt:
+            y = rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16),
+                               job_class="decode").result(60)
+            outs.append(np.asarray(y))
+    assert all(np.array_equal(outs[0], o) for o in outs[1:])
+    # merged result stays within the int8 tolerance of the fp32 oracle
+    ref = np.asarray(jnp.dot(a, w))
+    rel = float(np.max(np.abs(outs[0] - ref)) / (np.max(np.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_mixed_pool_split_is_precision_opt_in():
+    """Regression: a GEMM that did NOT opt into int8 (no job class) must
+    come out of a mixed-pool split at FULL precision — panels seed only
+    onto fp32 workers, mirroring the dispatcher's auto-dispatch
+    exclusion.  A decode-class split may use the whole pool."""
+    fp32, int8 = _mixed_pool(seed=3)
+    a, w = _ab(10 * 16, 40, 24, seed=14)
+    js = JobSet.for_gemm(0, a.shape[0], 24, 40, 16)
+    ref = fp32.execute(a, w)
+    with SynergyRuntime([fp32, int8], name="optin") as rt:
+        y_plain = rt.submit_gemm(a, w, jobset=js,
+                                 tile=(16, 16, 16)).result(60)
+        fut = rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16),
+                             job_class="decode")
+        fut.result(60)
+    # no job class: full precision, no panel quantized
+    np.testing.assert_allclose(np.asarray(y_plain), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # decode class: the int8 engine took real panels
+    assert int8.name in fut.accounting
+
+
+def test_mixed_pool_merges_partials_in_fp32():
+    """Dequant-aware accumulation: bf16-requested outputs round ONCE from
+    fp32-merged partials, not per panel per engine."""
+    fp32, int8 = _mixed_pool(seed=1)
+    a, w = _ab(8 * 16, 32, 16, seed=9)
+    a16 = a.astype(jnp.bfloat16)
+    js = JobSet.for_gemm(0, a16.shape[0], 16, 32, 16)
+    with SynergyRuntime([fp32, int8], name="bf16") as rt:
+        y = rt.submit_gemm(a16, w.astype(jnp.bfloat16), jobset=js,
+                           tile=(16, 16, 16)).result(60)
+    assert y.dtype == jnp.bfloat16
+    ref = jnp.dot(a.astype(jnp.float32), w)
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref))
+                / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.1, rel
+
+
+def test_accounting_jobs_still_steal_across_mixed_pool():
+    """Serving proxies carry no numerics — mixed pools keep them STEALABLE
+    (that is where the heterogeneous throughput comes from); only
+    real-array panels are precision-pinned."""
+    fp32, int8 = _mixed_pool(seed=2)
+    js = JobSet.for_gemm(0, 640, 128, 64, 32, name="acct-proxy")
+    a, w = _ab(2 * 16, 32, 16, seed=11)
+    js_real = JobSet.for_gemm(0, a.shape[0], 16, 32, 16, name="real-split")
+    with SynergyRuntime([fp32, int8], name="acct") as rt:
+        assert rt._mixed_precision_pool()
+        seen = {}
+        orig = rt._submit_jobs
+
+        def spy(jobset, units, merge, affinity, stealable=True, **kw):
+            seen[jobset.name] = stealable
+            return orig(jobset, units, merge, affinity, stealable, **kw)
+
+        rt._submit_jobs = spy
+        fut = rt.submit(js, affinity=fp32.name)
+        fut.result(30)
+        assert sum(x["jobs"] for x in fut.accounting.values()) == js.num_jobs
+        rt.submit_gemm(a, w, jobset=js_real, tile=(16, 16, 16)).result(30)
+    assert seen[js.name] is True          # accounting: free to steal
+    assert seen[js_real.name] is False    # real arrays: precision-pinned
+
+
+class _SlowFp32(Engine):
+    """Deterministic slow fp32 engine: keeps its queue populated long
+    enough for mid-run pool changes to act on queued panels."""
+
+    def __init__(self, name, delay_s=0.01):
+        super().__init__(name, {CAP_GEMM, "epilogue"},
+                         cost=CostModel(macs_per_s=1e9))
+        self._delay_s = delay_s
+
+    def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                out_dtype=None, precision=None):
+        import time
+        time.sleep(self._delay_s)
+        return jnp.dot(a.astype(jnp.float32),
+                       b.astype(jnp.float32)).astype(out_dtype or a.dtype)
+
+
+def test_int8_hotplug_never_quantizes_inflight_fp32_panels():
+    """Regression: adding an int8 engine mid-run must not rebalance or
+    steal queued panels of a GEMM that never opted into int8 — the
+    opt-in travels ON the job, not just in the seed-time pool check."""
+    slow = _SlowFp32("hp-fp32")
+    fast_int8 = QuantizedEngine(get_engine("xla"), name="hp-int8")
+    a, w = _ab(24 * 16, 32, 16, seed=16)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime([slow]) as rt:
+        fut = rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16))
+        rt.add_engine(fast_int8)          # rebalance while panels queued
+        y = fut.result(120)
+        assert "hp-int8" not in fut.accounting   # int8 never touched them
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.dot(a, w)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_unknown_job_class_raises():
+    """A typo'd job class must fail loudly, not silently drop routing."""
+    js = JobSet.for_gemm(0, 64, 64, 64, 32)
+    with pytest.raises(KeyError, match="unknown job class"):
+        Dispatcher().select(js, job_class="training")   # 'train' exists
+    fp32, int8 = _mixed_pool(seed=4)
+    a, w = _ab(2 * 16, 32, 16, seed=17)
+    js2 = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime([fp32, int8], name="typo") as rt:
+        with pytest.raises(KeyError, match="unknown job class"):
+            rt.submit_gemm(a, w, jobset=js2, tile=(16, 16, 16),
+                           job_class="Decode")
+
+
+# -------------------------------------------------------- recalibration
+
+class _MiscalibratedEngine(Engine):
+    """Claims ``claimed`` MAC/s; actually delivers ``actual`` (simulated
+    by a deterministic per-job sleep)."""
+
+    def __init__(self, name, claimed, actual):
+        super().__init__(name, {CAP_GEMM, "epilogue"},
+                         cost=CostModel(macs_per_s=claimed))
+        self.actual = actual
+
+    def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                out_dtype=None, precision=None):
+        import time
+        macs = a.shape[0] * a.shape[1] * b.shape[1]
+        time.sleep(macs / self.actual)
+        return jnp.dot(a, b).astype(out_dtype or a.dtype)
+
+
+def test_recalibrate_converges_toward_measured_rate():
+    """ISSUE 3 satellite: an engine mis-calibrated 100x fast converges
+    toward its measured rate under the EMA (each window halves the error
+    at alpha=0.5), so LPT seeding stops over-seeding it."""
+    true_rate = 2e8
+    eng = _MiscalibratedEngine("liar", claimed=100 * true_rate,
+                               actual=true_rate)
+    a, w = _ab(12 * 16, 32, 16, seed=10)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    errors = [eng.cost.macs_per_s / true_rate]
+    with SynergyRuntime([eng], name="recal") as rt:
+        for _ in range(6):
+            rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16)).result(60)
+            updated = rt.recalibrate(alpha=0.5)
+            assert "liar" in updated
+            errors.append(eng.cost.macs_per_s / true_rate)
+    # strictly decreasing over-estimate (alpha=0.5 halves the error each
+    # window), within 4x of the measured rate after six windows
+    assert all(e2 < e1 for e1, e2 in zip(errors, errors[1:]))
+    assert errors[-1] < 4.0, errors
+    # the consumed window yields nothing until new work arrives
+    with SynergyRuntime([eng], name="recal2") as rt:
+        assert rt.recalibrate() == {}
+
+
+def test_recalibrate_never_touches_sim_engines():
+    """CAP_SIM cost models are the paper's calibrated constants; a
+    measured host-oracle rate must never overwrite them."""
+    fpe = get_engine("F-PE")
+    before = fpe.cost.macs_per_s
+    a, w = _ab(4 * 16, 32, 16, seed=18)
+    js = JobSet.for_gemm(0, a.shape[0], 16, 32, 16)
+    with SynergyRuntime(["F-PE"], name="simcal") as rt:
+        rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16)).result(60)
+        assert rt.recalibrate() == {}
+    assert fpe.cost.macs_per_s == before
+
+
+# --------------------------------------------------------------- serving
+
+def test_server_reports_per_precision_jobs():
+    from repro.configs import ARCHS, reduced
+    from repro.core.serving import Request, SynergyServer
+    from repro.models import init_model
+    cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                  n_heads=2, d_ff=64, vocab=128)
+    params = init_model(cfg, jax.random.key(0))
+    q = QuantizedEngine(get_engine("xla"), name="serve-int8")
+    with registered(q):
+        srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4)
+        for i in range(3):
+            srv.submit(Request(i, jax.random.randint(jax.random.key(i),
+                                                     (4,), 0, 128),
+                               max_new_tokens=4))
+        stats = srv.run()
+    # decode routed to the int8 engine, prefill stayed grad-safe fp32
+    assert stats.job_engine["decode"] == "serve-int8"
+    assert stats.job_engine["prefill"] != "serve-int8"
+    assert stats.precision_jobs["int8"] > 0
+    assert stats.precision_jobs["fp32"] > 0
+    # every decode-class tile job landed on the int8 engine
+    assert stats.precision_jobs["int8"] == q.telemetry.jobs

@@ -1,0 +1,76 @@
+"""Property tests for the quant subsystem (ISSUE 3 satellite).
+
+Two invariants, hypothesis-driven:
+
+  * the int8 quantize -> dequant reconstruction error stays within the
+    calibrated per-channel bound (scale/2 per element) across random GEMM
+    shapes and weight scales;
+  * runtime split/merge over a MIXED-precision pool is deterministic
+    given a seed — the precision-pinned LPT seed makes the merged output
+    a pure function of (inputs, pool), never of thread timing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev deps
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.job import JobSet                         # noqa: E402
+from repro.engines.sim import SIM_ENGINE_SPECS, SimPEEngine  # noqa: E402
+from repro.quant import (QuantizedEngine, dequantize_weights,  # noqa: E402
+                         quant_gemm, quantize_weights)
+from repro.soc import SynergyRuntime                      # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 96), n=st.integers(1, 96),
+       wscale=st.floats(1e-3, 10.0), seed=st.integers(0, 2**16))
+def test_quantize_error_within_calibrated_bound(k, n, wscale, seed):
+    w = jax.random.normal(jax.random.key(seed), (k, n)) * wscale
+    qw = quantize_weights(w)
+    err = jnp.abs(dequantize_weights(qw) - w)
+    # per-channel: each column's error bounded by ITS scale / 2
+    assert bool(jnp.all(err <= qw.scale / 2 + 1e-6 * wscale))
+    assert float(jnp.max(err)) <= qw.error_bound + 1e-6 * wscale
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+       seed=st.integers(0, 2**16))
+def test_quant_gemm_error_tracks_weight_scale(m, k, n, seed):
+    """GEMM-level consequence of the bound: |y_q - y_f| <= sum_k |a_ik| *
+    scale_j/2, evaluated per output element (tight shapes included)."""
+    ka, kb = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(ka, (m, k))
+    w = jax.random.normal(kb, (k, n)) * 0.1
+    qw = quantize_weights(w)
+    y_q = quant_gemm(a, qw)
+    y_f = jnp.dot(a, w)
+    bound = jnp.dot(jnp.abs(a), jnp.ones((k, 1))) * (qw.scale / 2)
+    assert bool(jnp.all(jnp.abs(y_q - y_f) <= bound + 1e-5))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), panels=st.integers(2, 12))
+def test_mixed_pool_split_merge_deterministic_given_seed(seed, panels):
+    """Same seed -> same inputs -> bitwise-identical merged output, every
+    run, despite two engines of different precision racing for work."""
+    fp32 = SimPEEngine(f"prop-fp32-{seed}", SIM_ENGINE_SPECS["F-PE"])
+    int8 = QuantizedEngine(fp32, name=f"prop-int8-{seed}")
+    ka, kb = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(ka, (panels * 16, 32))
+    w = jax.random.normal(kb, (32, 24)) * 0.05
+    js = JobSet.for_gemm(0, a.shape[0], 24, 32, 16, name=f"prop{seed}")
+    outs = []
+    for trial in range(2):
+        with SynergyRuntime([fp32, int8], name=f"prop-{seed}-{trial}") as rt:
+            y = rt.submit_gemm(a, w, jobset=js, tile=(16, 16, 16),
+                               job_class="decode").result(60)
+            outs.append(np.asarray(y))
+    assert np.array_equal(outs[0], outs[1])
+    rel = float(np.max(np.abs(outs[0] - np.asarray(jnp.dot(a, w))))
+                / (np.max(np.abs(np.asarray(jnp.dot(a, w)))) + 1e-9))
+    assert rel < 0.05, rel
