@@ -1,0 +1,122 @@
+"""Benchmark regression gate: compare a fresh run against a baseline.
+
+    python benchmarks/check_regression.py --baseline /tmp/baseline.json \
+        --new results/latest.json [--max-drop 0.20]
+
+Either argument may be a ``results/latest.json`` POINTER ({"path": ...})
+or a full benchmark dump.  The comparison extracts every numeric
+``fps``-like field (``fps``, ``weighted_fps``, per-mode/pool/net rows)
+from benchmarks present in BOTH runs and fails (exit 1) when any
+simulated-fps value drops more than ``--max-drop`` relative to the
+baseline.  New benchmarks (present only in the new run) and wall-clock
+fields are ignored — the gate protects the DES/virtual-time throughput
+claims, which are deterministic up to cost-model edits, not host timing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: row fields that identify a row within a benchmark's table
+_ROW_KEYS = ("net", "pool", "mode", "design", "leg", "shape")
+
+#: numeric fields treated as simulated-fps claims
+_FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
+               "fpga_fps", "het_fps")
+
+
+def load_run(path: str) -> dict:
+    """Load a benchmark dump, following a latest.json pointer if given."""
+    with open(path) as f:
+        data = json.load(f)
+    if "path" in data and set(data) <= {"path", "stamp"}:   # pointer file
+        target = data["path"]
+        if not os.path.isabs(target):
+            # the pointer records a repo-root-relative path; a snapshot
+            # copied elsewhere still points back into the repo, so try
+            # the cwd first, then next to the pointer itself
+            candidates = (
+                target,
+                os.path.join(os.path.dirname(os.path.abspath(path)),
+                             os.path.basename(target)),
+                os.path.join(os.path.dirname(os.path.abspath(path)), "..",
+                             target),
+            )
+            target = next((c for c in candidates if os.path.exists(c)),
+                          target)
+        with open(target) as f:
+            data = json.load(f)
+    return data
+
+
+def fps_metrics(run: dict) -> dict[tuple, float]:
+    """{(benchmark, row-id, field): value} for every fps-like number."""
+    out: dict[tuple, float] = {}
+    for bench, payload in run.items():
+        rows = payload.get("rows") if isinstance(payload, dict) else None
+        if not isinstance(rows, list):
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                continue
+            row_id = next((str(row[k]) for k in _ROW_KEYS if k in row),
+                          str(i))
+            for field in _FPS_FIELDS:
+                v = row.get(field)
+                if isinstance(v, (int, float)) and v > 0:
+                    out[(bench, row_id, field)] = float(v)
+    return out
+
+
+def compare(baseline: dict, new: dict, max_drop: float) -> list[str]:
+    """Regressions worse than ``max_drop``, as human-readable lines."""
+    base_m, new_m = fps_metrics(baseline), fps_metrics(new)
+    failures = []
+    for key in sorted(base_m.keys() & new_m.keys()):
+        b, n = base_m[key], new_m[key]
+        drop = 1.0 - n / b
+        if drop > max_drop:
+            failures.append(
+                f"{'/'.join(key)}: {b:.2f} -> {n:.2f} "
+                f"({drop:.0%} drop > {max_drop:.0%} allowed)")
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--baseline", required=True,
+                        help="baseline run (dump or latest.json pointer)")
+    parser.add_argument("--new", required=True,
+                        help="fresh run (dump or latest.json pointer)")
+    parser.add_argument("--max-drop", type=float, default=0.20,
+                        help="max tolerated relative fps drop (default 0.20)")
+    args = parser.parse_args(argv)
+
+    baseline, new = load_run(args.baseline), load_run(args.new)
+    base_m, new_m = fps_metrics(baseline), fps_metrics(new)
+    shared = base_m.keys() & new_m.keys()
+    print(f"comparing {len(shared)} shared fps metrics "
+          f"({len(base_m)} baseline, {len(new_m)} new)")
+    if base_m and not shared:
+        # a rename/row-shape drift that empties the intersection would
+        # otherwise pass vacuously — a silently disabled gate is itself
+        # a regression
+        print("REGRESSION GATE BROKEN: baseline has fps metrics but the "
+              "new run shares none (benchmark renamed or rows "
+              "restructured?)")
+        return 1
+    failures = compare(baseline, new, args.max_drop)
+    if failures:
+        print("REGRESSION:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print(f"ok: no simulated-fps drop exceeds {args.max_drop:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

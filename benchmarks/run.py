@@ -5,9 +5,11 @@ full rows to a timestamped ``results/benchmarks-<UTC stamp>.json`` (plus a
 ``results/latest.json`` pointer) so successive runs never clobber each
 other.
 
-``--filter SUBSTR`` runs only benchmarks whose name contains SUBSTR;
-``--smoke`` shrinks the simulated frame counts for CI smoke jobs
-(``--filter quant --smoke`` is the CI benchmark-smoke invocation).
+``--filter SUBSTR[,SUBSTR...]`` runs only benchmarks whose name contains
+any listed substring; ``--smoke`` shrinks the simulated frame counts for
+CI smoke jobs (``--filter quant,qmm --smoke`` is the CI benchmark-smoke
+invocation, gated afterwards by ``check_regression.py`` against the
+committed ``results/latest.json`` baseline).
 """
 
 from __future__ import annotations
@@ -29,8 +31,9 @@ _SMOKE_FRAMES = 8
 
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("--filter", default="", metavar="SUBSTR",
-                        help="run only benchmarks whose name contains this")
+    parser.add_argument("--filter", default="", metavar="SUBSTR[,SUBSTR...]",
+                        help="run only benchmarks whose name contains any "
+                             "of these comma-separated substrings")
     parser.add_argument("--smoke", action="store_true",
                         help="shrink frame counts (CI smoke mode)")
     args = parser.parse_args(argv)
@@ -38,8 +41,12 @@ def main(argv=None) -> None:
     from benchmarks import paper_figs
     if args.smoke:
         paper_figs.FRAMES = _SMOKE_FRAMES
+    # drop empty segments: a trailing comma must not silently select ALL
+    # benchmarks (the smoke gate would then compare FRAMES=8 DES fps
+    # against the full-frame baseline and fail spuriously)
+    tokens = [t for t in args.filter.split(",") if t] or [""]
     selected = {name: fn for name, fn in paper_figs.ALL.items()
-                if args.filter in name}
+                if any(tok in name for tok in tokens)}
     if not selected:
         parser.error(f"--filter {args.filter!r} matches no benchmark "
                      f"(known: {sorted(paper_figs.ALL)})")

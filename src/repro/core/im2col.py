@@ -12,9 +12,26 @@ We keep NHWC layout (TPU-native) rather than Darknet's NCHW.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@functools.lru_cache(maxsize=256)
+def _patch_index_grids(oh: int, ow: int, kh: int, kw: int,
+                       stride: int) -> tuple[np.ndarray, np.ndarray]:
+    """(OH, KH) row and (OW, KW) col gather indices, memoized: a CNN
+    forward pass calls im2col once per conv layer per step with the same
+    handful of geometries, and rebuilding the grids costs numpy work on
+    every call of what is otherwise a pure-JAX hot path.  Treat the
+    returned arrays as read-only (they are shared across calls)."""
+    i0 = np.arange(oh) * stride
+    j0 = np.arange(ow) * stride
+    rows = i0[:, None] + np.arange(kh)[None, :]
+    cols = j0[:, None] + np.arange(kw)[None, :]
+    return rows, cols
 
 
 def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
@@ -26,12 +43,8 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
     oh = (h + 2 * padding - kh) // stride + 1
     ow = (w + 2 * padding - kw) // stride + 1
     # extract_patches via gather of strided slices; vectorized with reshape
-    # trick: build index grids once (static shapes).
-    i0 = np.arange(oh) * stride
-    j0 = np.arange(ow) * stride
-    # (OH, KH) row indices and (OW, KW) col indices
-    rows = i0[:, None] + np.arange(kh)[None, :]
-    cols = j0[:, None] + np.arange(kw)[None, :]
+    # trick: index grids are static per (geometry) — memoized above.
+    rows, cols = _patch_index_grids(oh, ow, kh, kw, stride)
     # gather -> (N, OH, KH, W', C) -> (N, OH, KH, OW, KW, C)
     patches = x[:, rows, :, :]           # (N, OH, KH, W+2p, C)
     patches = patches[:, :, :, cols, :]  # (N, OH, KH, OW, KW, C)

@@ -194,15 +194,18 @@ class SynergyServer:
         precision-routing policy applies — ``job.kind`` is the dispatcher
         job class, so DECODE steps land on registered int8 engines while
         prefill stays on grad-safe full-precision paths — and per-precision
-        job counts land in ``ServeStats.precision_jobs``."""
+        job counts land in ``ServeStats.precision_jobs``.  Returns the
+        policy-selected engine (the runtime path returns the seed-hint
+        engine) so decode can feed its activation calibrator."""
         js = job.jobset()
         if self.runtime is not None:
             # queue-affinity hint: seed on the policy's choice (int8 for
             # decode when one is registered), let idle engines steal tiles
             try:
-                hint = self.dispatcher.select(js, job_class=job.kind).name
+                hint_eng = self.dispatcher.select(js, job_class=job.kind)
+                hint = hint_eng.name
             except RuntimeError:
-                hint = None
+                hint_eng, hint = None, None
             fut = self.runtime.submit(js, affinity=hint)
             fut.result(timeout=60.0)
             acct = fut.accounting
@@ -220,7 +223,7 @@ class SynergyServer:
             self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
             self.stats.runtime_steals += sum(a["steals"]
                                              for a in acct.values())
-            return None
+            return hint_eng
         eng = self.dispatcher.select(js, job_class=job.kind)
         est = eng.estimate(js)
         eng.telemetry.record(js, est)
@@ -267,14 +270,36 @@ class SynergyServer:
         self.slot_pos[slot] = int(toks.shape[0])
         self.stats.prefills += 1
 
+    def _feed_act_calibrator(self, eng: Optional[Engine],
+                             toks: jnp.ndarray,
+                             live: tuple[int, ...]) -> None:
+        """Decode feeds the activation calibrator: the step's LIVE-slot
+        token embeddings are the activation panel of the decode GEMMs,
+        so observing them per step converges the quantized engine's
+        per-shape EMA online (keyed by the serving proxy GEMM's (k, n) =
+        (d_model, 4*d_model), the same key the runtime's int8 split
+        consults).  Empty slots are excluded — their padding token-0
+        embeddings are not traffic, and a large embed[0] row would
+        inflate the max|a| EMA and waste int8 resolution on an artifact.
+        A plain fp32 engine has no calibrator — no-op."""
+        if eng is None or not hasattr(eng, "observe_activations") or not live:
+            return
+        embed = (self.params.get("embed")
+                 if isinstance(self.params, dict) else None)
+        if embed is None:
+            return
+        acts = embed[toks[jnp.array(live), 0]]
+        eng.observe_activations(acts, self.cfg.d_model, 4 * self.cfg.d_model)
+
     def _do_decode(self) -> None:
         live = tuple(i for i, r in enumerate(self.slot_req) if r is not None)
-        self._account(DecodeJob(self.stats.decode_steps, live,
-                                self.cfg.d_model, self.cfg.n_layers))
         toks = jnp.zeros((self.slots, 1), jnp.int32)
         for i, r in enumerate(self.slot_req):
             if r is not None and r.out:
                 toks = toks.at[i, 0].set(r.out[-1])
+        eng = self._account(DecodeJob(self.stats.decode_steps, live,
+                                      self.cfg.d_model, self.cfg.n_layers))
+        self._feed_act_calibrator(eng, toks, live)
         # per-slot positions: each live slot reads/writes at ITS OWN index
         # (a shared max(pos) would smear late-arriving requests' tokens
         # into earlier requests' cache rows); empty slots are masked (-1)

@@ -24,8 +24,12 @@ advertising every required capability.  The core vocabulary:
   ``interpret`` Pallas target that can also run in interpret mode off-TPU
   ``sim``       cost-model-only paper PE (executes via the XLA oracle)
   ``oracle``    numerical reference; never auto-selected for speed
-  ``int8``      int8 weight-only quantized path (low precision, high rate;
-                NOT grad-safe — round/clip kill the weight gradient)
+  ``int8``      int8 quantized path (low precision, high rate; NOT
+                grad-safe — round/clip kill the weight gradient).  Weights
+                are always int8; once the engine's online activation
+                calibrator publishes a shape's scale the contraction runs
+                TRUE int8×int8 with int32 accumulation (kernels/qmm),
+                falling back to the weight-only fp32-cast dot before that.
   ``vpu``       vector-unit-only execution (no MXU) — the TPU analog of
                 the paper's NEON SIMD cores
 """

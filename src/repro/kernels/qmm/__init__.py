@@ -1,0 +1,8 @@
+"""qmm — int8×int8 Pallas tiled matmul with int32 accumulation, the
+quantized engine family's true fixed-point compute path."""
+
+from .ops import qmm_matmul
+from .ref import qmm_ref
+from .qmm import qmm_pallas
+
+__all__ = ["qmm_matmul", "qmm_ref", "qmm_pallas"]

@@ -1,0 +1,43 @@
+"""Int-exact oracle for the qmm kernel.
+
+Unlike the fp32 kernels' oracles (where summation ORDER matters within
+rounding), integer accumulation is exact and order-independent, so this
+reference and the Pallas kernel agree BITWISE on the int32 accumulator —
+and, since the dequant epilogue applies the same fp32 ops in the same
+order, on the fused output too.  That exactness is why ops.py can route
+the off-TPU fallback here instead of the (slow) Pallas interpreter with
+no numeric drift.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def qmm_ref(a_q: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+            act_scale: jax.Array | float = 1.0,
+            bias: jax.Array | None = None,
+            activation: Callable | None = None,
+            out_dtype=jnp.float32,
+            fuse_dequant: bool = True) -> jax.Array:
+    """act((A_q @ W_q) * scale * act_scale + bias), int8 operands into
+    the dot, exact int32 accumulation.  ``scale`` is the (1, n) dequant
+    multiplier (callers usually pre-fold the activation scale in and
+    leave ``act_scale`` at 1).  ``fuse_dequant=False`` returns the raw
+    int32 accumulator (runtime split/merge mode)."""
+    acc = jax.lax.dot_general(
+        a_q, w_q,
+        (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    if not fuse_dequant:
+        return acc
+    y = acc.astype(jnp.float32) * (
+        scale.reshape(1, -1).astype(jnp.float32) * jnp.float32(act_scale))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = activation(y)
+    return y.astype(out_dtype)

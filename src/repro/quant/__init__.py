@@ -1,26 +1,37 @@
 """``repro.quant`` — the int8 quantized-engine subsystem.
 
-Three layers, mirroring how the paper treats its accelerators:
+Four layers, mirroring how the paper treats its accelerators:
 
   * :mod:`repro.quant.quantize`  — the numeric scheme (symmetric
-    per-output-channel int8 weights, fp32 dequant epilogue).
+    per-output-channel int8 weights; ``quant_gemm`` runs the TRUE
+    int8×int8 qmm kernel when an activation scale is available, the
+    weight-only fp32-cast dot otherwise).
+  * :mod:`repro.quant.act`       — online activation quantization:
+    per-GEMM-shape :class:`ActScale` EMAs calibrated from live decode
+    batches (deterministic given the observation sequence).
   * :mod:`repro.quant.engine`    — :class:`QuantizedEngine`, which adapts
-    any CAP_GEMM engine into a CAP_GRAD-free ``int8`` registry entry with
-    a higher calibrated rate.
-  * :mod:`repro.quant.calibrate` — measured error vs the fp32 oracle;
-    :func:`register_quantized` refuses engines past tolerance.
+    any CAP_GEMM engine into a CAP_GRAD-free ``int8`` registry entry.
+  * :mod:`repro.quant.calibrate` — measured error vs the fp32 oracle on
+    the int8×int8 path; :func:`register_quantized` refuses engines past
+    tolerance and replaces the nominal 4x cost guess with the rate
+    measured on the real kernel.
 
 Typical serving setup::
 
     from repro.quant import register_quantized
     register_quantized("xla", tol=0.05)   # 'xla-int8' joins the registry
     # decode-class jobs now prefer the int8 engine (Dispatcher policy);
+    # live decode batches calibrate activation scales online, flipping
+    # each GEMM shape onto the int8×int8 kernel as it warms up;
     # prefill/training stay on CAP_GRAD full-precision paths.
 """
 
 from .quantize import (QuantizedWeight, dequant_epilogue, dequant_finish,
                        dequantize_weights, quant_gemm, quantization_error,
                        quantize_weights)
+from .act import (ActCalibrator, ActScale, DEFAULT_MIN_UPDATES,
+                  DEFAULT_MOMENTUM, one_shot_act_scale,
+                  quantize_activations)
 from .engine import INT8_SPEEDUP, QuantizedEngine
 from .calibrate import (DEFAULT_SHAPES, DEFAULT_TOL, CalibrationError,
                         CalibrationReport, calibrate, register_quantized,
@@ -30,6 +41,8 @@ __all__ = [
     "QuantizedWeight", "quantize_weights", "dequantize_weights",
     "dequant_epilogue", "dequant_finish", "quant_gemm",
     "quantization_error",
+    "ActScale", "ActCalibrator", "quantize_activations",
+    "one_shot_act_scale", "DEFAULT_MOMENTUM", "DEFAULT_MIN_UPDATES",
     "QuantizedEngine", "INT8_SPEEDUP",
     "CalibrationError", "CalibrationReport", "DEFAULT_SHAPES", "DEFAULT_TOL",
     "calibrate", "register_quantized", "rel_err",

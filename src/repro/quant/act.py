@@ -1,0 +1,142 @@
+"""Online activation quantization — per-tensor int8 scales calibrated
+from live decode batches.
+
+Weight scales are known offline (the weights never change at serve
+time); activation ranges are a property of the TRAFFIC, so they must be
+learned online.  The scheme is the standard serving one (TensorRT-style
+EMA range calibration): per GEMM shape, track an exponential moving
+average of the per-batch max |a| and derive one symmetric per-tensor
+scale ``amax / 127`` from it.  Once a shape has seen ``min_updates``
+batches the scale is published and the quantized engine family's
+int8×int8 fast path switches on for that shape; until then (and for
+trace-time Tracers, which have no values to observe) execution falls
+back to the weight-only fp32-cast dot.
+
+Determinism: calibration is a pure fold over the observation sequence —
+same batches in the same order produce bit-identical scales, so a
+seeded workload calibrates identically across runs (property-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Hashable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ActScale", "ActCalibrator", "quantize_activations",
+           "one_shot_act_scale", "DEFAULT_MOMENTUM", "DEFAULT_MIN_UPDATES"]
+
+_QMAX = 127.0
+
+#: EMA momentum: high enough to ride out one outlier batch, low enough
+#: that a few decode steps converge the range
+DEFAULT_MOMENTUM = 0.9
+
+#: batches a shape must contribute before its scale is published
+DEFAULT_MIN_UPDATES = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ActScale:
+    """Calibrated activation range of one GEMM shape.
+
+    ``amax``    EMA of per-batch max |a|.
+    ``updates`` batches folded in so far.
+    """
+
+    amax: float
+    updates: int
+
+    @property
+    def scale(self) -> float:
+        """Symmetric per-tensor int8 scale: ``a ~= q * scale``."""
+        return max(self.amax, 1e-12) / _QMAX
+
+
+def one_shot_act_scale(a: jax.Array) -> float:
+    """The scale one batch implies on its own — ``max|a| / 127``, i.e.
+    :class:`ActScale` after a single observation.  Benchmarks and tests
+    that quantize a known batch use this so they measure the SAME range
+    convention the online calibrator publishes."""
+    return float(jnp.max(jnp.abs(a))) / _QMAX
+
+
+def quantize_activations(a: jax.Array, scale) -> jax.Array:
+    """a -> symmetric per-tensor int8 at the calibrated scale (a Python
+    float or traced scalar).  Values beyond the calibrated range saturate
+    at ±127 (the EMA absorbs range drift over the next batches)."""
+    return jnp.clip(jnp.round(a.astype(jnp.float32) / scale),
+                    -_QMAX, _QMAX).astype(jnp.int8)
+
+
+class ActCalibrator:
+    """Per-GEMM-shape online range calibrator.
+
+    ``observe(a, key)`` folds one live batch into the shape's EMA;
+    ``scale_for(key)`` returns the published scale (a Python float — it
+    closes over jit traces as a constant) or None while the shape is
+    still warming up.  Thread-safe: runtime workers and serving threads
+    observe concurrently."""
+
+    def __init__(self, momentum: float = DEFAULT_MOMENTUM,
+                 min_updates: int = DEFAULT_MIN_UPDATES):
+        self.momentum = momentum
+        self.min_updates = min_updates
+        self._scales: dict[Hashable, ActScale] = {}
+        self._lock = threading.Lock()
+
+    def observe(self, a: jax.Array, key: Hashable) -> Optional[ActScale]:
+        """Fold one concrete activation batch into ``key``'s EMA.
+        Tracers are ignored (trace-time values do not exist yet).
+
+        Note the ``float(max|a|)`` is a host sync: the batch must land
+        before the EMA updates, which is inherent — the very next step
+        quantizes at the scale this observation publishes.  The runtime
+        amortizes it to one sync per SUBMISSION (the split plan observes
+        the whole activation once, panels reuse the quantization); a
+        deployment that wants zero syncs on the decode path can observe
+        on a cadence instead of every batch."""
+        if isinstance(a, jax.core.Tracer):
+            return self._scales.get(key)
+        amax = float(jnp.max(jnp.abs(a)))
+        with self._lock:
+            prev = self._scales.get(key)
+            if prev is None:
+                cur = ActScale(amax=amax, updates=1)
+            else:
+                cur = ActScale(
+                    amax=self.momentum * prev.amax
+                    + (1.0 - self.momentum) * amax,
+                    updates=prev.updates + 1)
+            self._scales[key] = cur
+            return cur
+
+    def scale_for(self, key: Hashable) -> Optional[float]:
+        """The published per-tensor scale for ``key``, or None while the
+        shape has fewer than ``min_updates`` observations."""
+        with self._lock:
+            s = self._scales.get(key)
+        if s is None or s.updates < self.min_updates:
+            return None
+        return s.scale
+
+    def state(self) -> dict:
+        """Snapshot of every calibrated shape (diagnostics / serving
+        stats)."""
+        with self._lock:
+            return dict(self._scales)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._scales.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._scales)
+
+    def __repr__(self) -> str:
+        return (f"<ActCalibrator {len(self)} shapes "
+                f"momentum={self.momentum} min_updates={self.min_updates}>")

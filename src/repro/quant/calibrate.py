@@ -14,11 +14,12 @@ cite the bound they are trading against.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.engines.base import CostModel, Engine
+from repro.engines.base import CAP_SIM, CostModel, Engine
 from repro.engines.registry import register_engine
 
 from .engine import INT8_SPEEDUP, QuantizedEngine
@@ -46,13 +47,22 @@ class CalibrationError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationReport:
-    """Quant-error metadata: per-shape relative error vs the fp32 oracle."""
+    """Quant-error metadata: per-shape relative error vs the fp32 oracle,
+    plus the rate measured on the engine's REAL compute path (since the
+    qmm kernel landed, that is the int8×int8 path for engines whose
+    activation calibrator published scales during the sweep)."""
 
     engine: str
     base: str
     tol: float
-    rows: tuple[dict, ...]            # {"m", "k", "n", "rel_err"}
+    rows: tuple[dict, ...]            # {"m", "k", "n", "rel_err", "wall_s"}
     max_rel_err: float
+    #: MACs/s measured over the calibration sweep's timed pass (None when
+    #: the sweep was too fast to time) — what replaces the simulated 4x
+    measured_macs_per_s: float | None = None
+    #: whether the timed pass ran the int8×int8 kernel (an engine without
+    #: an activation calibrator is gated on its weight-only path)
+    int8_path: bool = False
 
     @property
     def passed(self) -> bool:
@@ -63,6 +73,7 @@ class CalibrationReport:
         return (f"CalibrationReport({self.engine}: max_rel_err="
                 f"{self.max_rel_err:.2e} @ {worst['m']}x{worst['k']}x"
                 f"{worst['n']}, tol={self.tol:g}, "
+                f"{'int8x8' if self.int8_path else 'weight-only'}, "
                 f"{'PASS' if self.passed else 'FAIL'})")
 
 
@@ -80,22 +91,49 @@ def calibrate(engine: Engine, *,
               seed: int = 0) -> CalibrationReport:
     """Run ``engine`` over random GEMMs of each shape and compare against
     the fp32 oracle.  Pure measurement — registration gating happens in
-    :func:`register_quantized`."""
+    :func:`register_quantized`.
+
+    For a :class:`QuantizedEngine` with an activation calibrator, the
+    first (untimed) pass per shape feeds the calibrator its seeded batch,
+    so the error rows AND the timed rate measure the engine exactly as it
+    will serve: through the int8×int8 qmm kernel, not the weight-only
+    fp32-cast dot it used to be gated on.  The first pass also absorbs
+    jit compilation, so ``measured_macs_per_s`` is a steady-state rate."""
     from repro.kernels.tiled_mm.ref import tiled_mm_ref
     rows = []
+    total_macs, total_wall = 0, 0.0
+    # Warm passes: enough observations to cross the calibrator's publish
+    # threshold AND compile the path the timed pass will take — a
+    # min_updates=2 calibrator flips onto the int8 kernel on pass 2, so
+    # timing pass 2 would measure jit compilation and poison the rate
+    # the registration installs.  Re-observing the same batch is an EMA
+    # fixed point, so every pass quantizes at the identical scale.
+    cal = getattr(engine, "calibrator", None)
+    warm_passes = max(1, cal.min_updates) if cal is not None else 1
     key = jax.random.key(seed)
     for m, k, n in shapes:
         key, ka, kb = jax.random.split(key, 3)
         a = jax.random.normal(ka, (m, k), jnp.float32)
         w = jax.random.normal(kb, (k, n), jnp.float32) * 0.05
         want = tiled_mm_ref(a, w)
-        got = engine.execute(a, w, tile=(32, 32, 32))
-        rows.append({"m": m, "k": k, "n": n, "rel_err": rel_err(got, want)})
+        for _ in range(warm_passes):
+            jax.block_until_ready(engine.execute(a, w, tile=(32, 32, 32)))
+        t0 = time.perf_counter()
+        got = jax.block_until_ready(engine.execute(a, w, tile=(32, 32, 32)))
+        wall = time.perf_counter() - t0
+        total_macs += m * k * n
+        total_wall += wall
+        rows.append({"m": m, "k": k, "n": n, "rel_err": rel_err(got, want),
+                     "wall_s": wall})
     report = CalibrationReport(
         engine=engine.name,
         base=getattr(getattr(engine, "base", None), "name", engine.name),
         tol=tol, rows=tuple(rows),
-        max_rel_err=max(r["rel_err"] for r in rows))
+        max_rel_err=max(r["rel_err"] for r in rows),
+        measured_macs_per_s=(total_macs / total_wall
+                             if total_wall > 1e-9 else None),
+        int8_path=bool(getattr(engine, "act_scale_for", lambda k, n: None)(
+            shapes[-1][1], shapes[-1][2]) is not None))
     if isinstance(engine, QuantizedEngine) or hasattr(engine, "calibration"):
         engine.calibration = report
     return report
@@ -107,14 +145,21 @@ def register_quantized(base: Engine | str, *,
                        cost: CostModel | None = None,
                        shapes=DEFAULT_SHAPES, tol: float = DEFAULT_TOL,
                        seed: int = 0,
+                       measure_rate: bool = True,
                        override: bool = False) -> QuantizedEngine:
     """Wrap ``base`` as an int8 engine, calibrate it, and register it —
     REFUSING registration if the measured error exceeds ``tol``.
 
         eng = register_quantized("xla")        # 'xla-int8' joins the pool
 
-    The attached :class:`CalibrationReport` is the engine's quant-error
-    metadata; ``unregister_engine(eng.name)`` retires it as usual."""
+    The error gate now measures the int8×int8 qmm path (the calibration
+    sweep warms the activation calibrator), and — unless ``measure_rate``
+    is False or ``cost`` was passed explicitly — the engine's cost model
+    drops the simulated ``speedup``x guess in favor of the rate measured
+    on that real kernel during the sweep.  CAP_SIM bases keep their
+    scaled paper constants: their virtual time must never absorb a host
+    rate.  The attached :class:`CalibrationReport` is the engine's
+    quant-error metadata; ``unregister_engine(eng.name)`` retires it."""
     from repro.engines.registry import get_engine
     if isinstance(base, str):
         base = get_engine(base)
@@ -124,4 +169,8 @@ def register_quantized(base: Engine | str, *,
         raise CalibrationError(
             f"refusing to register {eng.name!r}: max relative error "
             f"{report.max_rel_err:.3e} exceeds tolerance {tol:g} ({report})")
+    if (measure_rate and cost is None
+            and report.measured_macs_per_s is not None
+            and CAP_SIM not in base.capabilities):
+        eng.recalibrate(report.measured_macs_per_s, alpha=1.0)
     return register_engine(eng, override=override)

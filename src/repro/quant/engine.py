@@ -1,13 +1,24 @@
-"""QuantizedEngine — adapt any CAP_GEMM engine into an int8 weight-only
-variant.
+"""QuantizedEngine — adapt any CAP_GEMM engine into an int8 variant.
 
 The wrapper is what makes the engine pool *genuinely* heterogeneous: the
 same physical backend shows up twice in the registry, once at full
-precision and once as a CAP_GRAD-free ``int8`` engine with a higher
-calibrated MAC rate (weight-only quantization is a bandwidth play — int8
-weights stream at 1 byte/elem, which is the roofline limiter for the
-small memory-bound GEMMs of decode).  The dispatcher's job-class policy
-and the SynergyRuntime then trade precision for throughput per job class.
+precision and once as a CAP_GRAD-free ``int8`` engine.  Since the qmm
+kernel landed, the int8 engine is no longer just a bandwidth play — it
+has two compute paths:
+
+  * **int8×int8 fast path** (the real one): once the engine's
+    :class:`~repro.quant.act.ActCalibrator` has published a per-tensor
+    activation scale for a GEMM shape, ``execute`` quantizes the
+    activations and runs the qmm Pallas kernel — int8 operands into the
+    contraction, exact int32 accumulation, dequant (w_scale × act_scale)
+    + bias + activation fused into the epilogue.  No fp32-cast dot.
+  * **weight-only fallback**: shapes still warming up (or Tracers, or a
+    disabled calibrator) run the old path — int8 weights cast up into
+    the BASE engine's floating dot, dequant applied as a separate tail.
+
+Calibration is ONLINE: every concrete ``execute`` folds its activation
+batch into the EMA before routing, so live decode traffic converges the
+scales and flips shapes onto the fast path as they warm up.
 
 Capability surgery on wrap:
 
@@ -16,29 +27,33 @@ Capability surgery on wrap:
     quantized path silently kills weight gradients; dropping CAP_GRAD (and
     the guard in ``synergy_matmul``) keeps training traffic off it.
   * ``- oracle``   — a lossy engine is never a numerical reference.
-  * ``- epilogue`` — the wrapper applies dequant -> bias -> activation as
-    a separate pass over C (see execute), so the "fused, no extra HBM
-    trip" promise the capability stands for does not hold here.
+  * ``- epilogue`` — the weight-only fallback applies dequant -> bias ->
+    activation as a separate pass over C (a tiled base's per-block
+    epilogue cannot broadcast the full-width (n,) scale); the qmm fast
+    path does fuse, but the capability describes the worst case.
 """
 
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Callable
+from typing import Callable, Hashable, Optional
 
 import jax
 
 from repro.engines.base import (CAP_EPILOGUE, CAP_GRAD, CAP_INT8,
                                 CAP_ORACLE, CostModel, Engine)
 
+from .act import ActCalibrator
 from .quantize import QuantizedWeight, quantize_weights
 
 __all__ = ["QuantizedEngine", "INT8_SPEEDUP"]
 
-#: default calibrated rate advantage of the int8 path over its fp32 base.
-#: Weight-only int8 reads weights at 1/4 the fp32 bytes; decode GEMMs are
-#: weight-bandwidth-bound, so the sustained rate scales close to 4x.
+#: nominal rate advantage of the int8 path over its fp32 base — the
+#: roofline argument (1-byte operand streams, int8 MXU mode).  This is
+#: only the STARTING cost model: ``register_quantized`` replaces it with
+#: a rate measured on the real qmm kernel for non-sim bases, and runtime
+#: recalibration keeps folding measured rates in afterwards.
 INT8_SPEEDUP = 4.0
 
 #: weight-cache capacity (decode reuses the same handful of weights every
@@ -47,18 +62,12 @@ _CACHE_SLOTS = 32
 
 
 class QuantizedEngine(Engine):
-    """Int8 weight-only view of a wrapped full-precision engine.
+    """Int8 view of a wrapped full-precision engine.
 
-    ``execute`` quantizes ``b`` per output channel (cached by array
-    identity — decode calls reuse the same weights every step), runs the
-    raw ``a @ q`` on the BASE engine at fp32 output precision, then
-    applies dequant scale -> bias -> activation at the wrapper level.
-    The epilogue deliberately stays OUTSIDE the base engine: a tiled base
-    (Pallas kernels) runs its epilogue per (ts_m, ts_n) block, where a
-    full-width ``(n,)`` multiplicative scale cannot broadcast — folding
-    the dequant into the base's activation hook would crash any CAP_TILED
-    backend.  Costs one unfused epilogue pass over C; the int8 weight
-    stream (the bandwidth win) is unaffected.
+    ``calibrator`` owns the per-shape activation scales ("auto" builds a
+    private :class:`ActCalibrator`; pass None to pin the engine to the
+    weight-only fallback forever, or share one instance across engines so
+    serving and runtime traffic calibrate the same EMAs).
 
     ``calibration`` is attached by :func:`repro.quant.calibrate.calibrate`
     / ``register_quantized`` — the quant-error metadata that travels with
@@ -66,13 +75,16 @@ class QuantizedEngine(Engine):
 
     def __init__(self, base: Engine, *, name: str | None = None,
                  speedup: float = INT8_SPEEDUP,
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None,
+                 calibrator: ActCalibrator | str | None = "auto"):
         caps = (base.capabilities
                 - {CAP_GRAD, CAP_ORACLE, CAP_EPILOGUE}) | {CAP_INT8}
         super().__init__(name or f"{base.name}-int8", caps,
                          cost=cost or base.cost.scaled(speedup))
         self.base = base
         self.speedup = speedup
+        self.calibrator = (ActCalibrator() if calibrator == "auto"
+                           else calibrator)
         #: CalibrationReport once calibrated (quant-error metadata)
         self.calibration = None
         # identity-keyed LRU: holding the key array alive guarantees its
@@ -102,9 +114,57 @@ class QuantizedEngine(Engine):
                 self._cache.popitem(last=False)
         return qw
 
+    # --------------------------------------------------------- activations
+    @staticmethod
+    def act_key(k: int, n: int) -> Hashable:
+        """Activation scales are keyed per GEMM shape by the WEIGHT'S
+        (k, n): the batch dimension varies step to step, but a layer's
+        activation statistics belong to the layer."""
+        return (int(k), int(n))
+
+    def observe_activations(self, a: jax.Array, k: int, n: int) -> None:
+        """Fold one live activation batch into the (k, n) shape's EMA —
+        how serving decode (and every concrete ``execute``) feeds the
+        calibrator."""
+        if self.calibrator is not None:
+            self.calibrator.observe(a, self.act_key(k, n))
+
+    def act_scale_for(self, k: int, n: int) -> Optional[float]:
+        """The published activation scale for a (k, n) GEMM shape, or
+        None while it is warming up (weight-only fallback applies)."""
+        if self.calibrator is None:
+            return None
+        return self.calibrator.scale_for(self.act_key(k, n))
+
     # ------------------------------------------------------------- execute
     def execute(self, a, b, *, bias=None, activation: Callable | None = None,
                 tile=(256, 256, 256), out_dtype=None, precision=None):
+        from .quantize import quant_gemm
+        k, n = b.shape
+        self.observe_activations(a, k, n)
+        scale = self.act_scale_for(k, n)
+        if scale is not None:
+            # the TRUE int8×int8 path: quantized operands into the qmm
+            # kernel, int32 accumulation, fused dequant epilogue
+            return quant_gemm(a, self.quantized(b), act_scale=scale,
+                              bias=bias, activation=activation,
+                              out_dtype=out_dtype or a.dtype, tile=tile)
+        return self.execute_weight_only(a, b, bias=bias,
+                                        activation=activation, tile=tile,
+                                        out_dtype=out_dtype,
+                                        precision=precision)
+
+    def execute_weight_only(self, a, b, *, bias=None,
+                            activation: Callable | None = None,
+                            tile=(256, 256, 256), out_dtype=None,
+                            precision=None):
+        """The weight-only fallback path, with NO online observation and
+        no chance of flipping onto the int8×int8 kernel mid-flight: int8
+        weights cast up into the base engine's floating dot, dequant
+        applied as the shared tail.  The runtime's precision-pinned
+        mixed-pool splits call this directly — a path choice that
+        depended on concurrent panel completion order would make the
+        merged numerics a function of thread timing."""
         import jax.numpy as jnp
 
         from .quantize import dequant_finish
@@ -114,6 +174,17 @@ class QuantizedEngine(Engine):
             tile=tile, out_dtype=jnp.float32, precision=precision)
         return dequant_finish(acc, qw, bias=bias, activation=activation,
                               out_dtype=out_dtype or a.dtype)
+
+    def execute_int8(self, a_q, qw: QuantizedWeight, *,
+                     tile=(256, 256, 256)):
+        """Raw int8×int8 partial: the int32 accumulator with NO dequant.
+        The SynergyRuntime splits a quantized GEMM into row panels in
+        this mode — integer partials are exact on every engine, so the
+        merge concatenates them and applies the shared ``dequant_finish``
+        ONCE (never rounding twice, bitwise-stable under stealing)."""
+        from repro.kernels.qmm import qmm_matmul
+        return qmm_matmul(a_q, qw.q, qw.scale, fuse_dequant=False,
+                          tile=tile)
 
     def __repr__(self) -> str:
         caps = ",".join(sorted(self.capabilities))

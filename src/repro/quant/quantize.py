@@ -80,14 +80,22 @@ def dequant_epilogue(acc: jax.Array, qw: QuantizedWeight) -> jax.Array:
 
 
 def dequant_finish(acc: jax.Array, qw: QuantizedWeight, *,
+                   act_scale: float | None = None,
                    bias: jax.Array | None = None,
                    activation: Callable | None = None,
                    out_dtype) -> jax.Array:
     """The ONE epilogue tail every quantized path shares (the standalone
-    ``quant_gemm`` and ``QuantizedEngine.execute`` must stay numerically
-    identical): dequant scale -> bias -> activation -> final cast, all
-    in fp32 until the cast."""
-    y = dequant_epilogue(acc, qw)
+    ``quant_gemm``, ``QuantizedEngine.execute`` and the runtime's
+    split/merge must stay numerically identical): dequant scale -> bias
+    -> activation -> final cast, all in fp32 until the cast.
+
+    ``acc`` is either an fp32 accumulator of the weight-only path
+    (``act_scale`` None) or the raw int32 accumulator of the int8×int8
+    path, whose per-tensor activation scale composes multiplicatively
+    with the per-channel weight scale."""
+    y = dequant_epilogue(acc.astype(jnp.float32), qw)
+    if act_scale is not None:
+        y = y * float(act_scale)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if activation is not None:
@@ -96,12 +104,34 @@ def dequant_finish(acc: jax.Array, qw: QuantizedWeight, *,
 
 
 def quant_gemm(a: jax.Array, qw: QuantizedWeight, *,
+               act_scale: float | None = None,
                bias: jax.Array | None = None,
                activation: Callable | None = None,
-               out_dtype=None) -> jax.Array:
-    """act(A @ dequant(q) + bias) with the dequant applied as an epilogue:
-    the int8 weights enter the dot at activation dtype (1 byte/elem read),
-    accumulation happens in fp32, then scale -> bias -> activation."""
+               out_dtype=None,
+               tile: tuple[int, int, int] | int = (256, 256, 256),
+               interpret: bool = False) -> jax.Array:
+    """act(A @ dequant(q) + bias) over int8 weights, two compute paths:
+
+    ``act_scale`` given (the calibrated per-tensor activation scale) —
+    the TRUE int8×int8 path: quantize A at that scale and run the qmm
+    kernel, whose contraction consumes int8 operands with exact int32
+    accumulation; scale -> bias -> activation fuse into the epilogue.
+
+    ``act_scale`` None — the weight-only fallback: int8 weights enter a
+    floating dot at activation dtype (1 byte/elem weight read),
+    accumulation in fp32, then the shared dequant tail."""
+    if act_scale is not None:
+        from repro.kernels.qmm import qmm_matmul
+        from .act import quantize_activations
+        a_q = quantize_activations(a, act_scale)
+        lead = a_q.shape[:-1]
+        a_q = a_q.reshape(-1, a_q.shape[-1])   # kernel contract is 2-D;
+        y = qmm_matmul(a_q, qw.q, qw.scale,    # batched a folds into m
+                       act_scale=act_scale,
+                       bias=bias, activation=activation,
+                       out_dtype=out_dtype or a.dtype, tile=tile,
+                       interpret=interpret)
+        return y.reshape(*lead, y.shape[-1])
     acc = jax.lax.dot_general(
         a, qw.q.astype(a.dtype),
         (((a.ndim - 1,), (0,)), ((), ())),

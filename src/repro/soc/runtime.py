@@ -33,6 +33,8 @@ the Table-6 utilization metric read the same counters.
 from __future__ import annotations
 
 import contextlib
+import json
+import os
 import threading
 import time
 from collections import deque
@@ -224,9 +226,25 @@ class SynergyRuntime:
 
     def __init__(self, engines: Optional[Iterable[Union[str, Engine]]] = None,
                  *, require: Iterable[str] = (CAP_GEMM,),
-                 follow_registry: bool = False, name: str = "runtime"):
+                 follow_registry: bool = False, name: str = "runtime",
+                 recalibrate_every: Optional[int] = None,
+                 recalibrate_alpha: float = 0.5,
+                 rates_path: Optional[Union[str, os.PathLike]] = None):
+        """``recalibrate_every=N`` makes the runtime self-calibrating: every
+        N completed submissions it folds measured worker rates into the
+        cost models (the serving analog of the paper's offline
+        calibration) — no caller-driven ``recalibrate()`` needed.
+        ``rates_path`` persists the learned ``macs_per_s`` to a JSON
+        sidecar after each recalibration and re-applies it on
+        construction, so a restarted process starts from the measured
+        rates (e.g. the real qmm kernel's) instead of the nominal
+        constants.  CAP_SIM engines are excluded from both directions."""
         self.name = name
         self.require = frozenset(require)
+        self._recal_every = recalibrate_every
+        self._recal_alpha = recalibrate_alpha
+        self._rates_path = os.fspath(rates_path) if rates_path else None
+        self._completed = 0    # finished submissions (cadence counter)
         # RLock: submission-completion hooks can fire from paths that
         # already hold the runtime lock (cancel / orphan-fail)
         self._lock = threading.RLock()
@@ -253,6 +271,8 @@ class SynergyRuntime:
         for eng in pool:
             self._workers[eng.name] = _Worker(eng)
         self._follow_registry = follow_registry
+        if self._rates_path:
+            self._load_rates()
 
     # ---------------------------------------------------------- lifecycle
     def start(self) -> "SynergyRuntime":
@@ -528,6 +548,9 @@ class SynergyRuntime:
     def _on_submission_done(self, fut: RuntimeFuture) -> None:
         with self._cond:
             self._inflight -= 1
+            self._completed += 1
+            recal_due = (self._recal_every is not None
+                         and self._completed % self._recal_every == 0)
             # one split GEMM is still ONE gemm: credit it to the engine
             # that executed the largest share (dispatcher-path parity)
             eng = None
@@ -538,6 +561,47 @@ class SynergyRuntime:
                 eng = w.engine if w is not None else None
         if eng is not None:
             eng.telemetry.record_jobs(0, 0.0, 0, gemms=1)
+        if recal_due:
+            # auto-recalibration cadence: consume the measurement window
+            # opened N submissions ago and persist what it taught us
+            self._save_rates(self.recalibrate(self._recal_alpha))
+
+    # -------------------------------------------------- rate persistence
+    def _load_rates(self) -> None:
+        """Re-apply persisted measured rates (the serving analog of the
+        paper's offline calibration surviving a power cycle).  A missing
+        or unreadable sidecar means a fresh start, never an error."""
+        try:
+            with open(self._rates_path) as f:
+                data = json.load(f).get("macs_per_s", {})
+        except (OSError, ValueError):
+            return
+        for w in self._workers.values():
+            rate = data.get(w.engine.name)
+            if rate and rate > 0 and CAP_SIM not in w.engine.capabilities:
+                # alpha=1: the sidecar IS the measured rate, not a hint
+                w.engine.recalibrate(float(rate), alpha=1.0)
+
+    def _save_rates(self, updated: dict[str, float]) -> None:
+        """Merge freshly learned rates into the JSON sidecar (atomically:
+        a crash mid-write must not corrupt the previous calibration)."""
+        if not self._rates_path or not updated:
+            return
+        data: dict = {}
+        try:
+            with open(self._rates_path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            pass
+        rates = data.setdefault("macs_per_s", {})
+        rates.update(updated)
+        tmp = f"{self._rates_path}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self._rates_path)
+        except OSError:
+            pass               # persistence is best-effort, never fatal
 
     def _submit_jobs(self, jobset, units: list[tuple], merge,
                      affinity: Optional[str],
@@ -594,24 +658,71 @@ class SynergyRuntime:
         ``job_class`` admits int8 (decode), every panel carries
         ``int8_ok=False`` and can never be placed on a CAP_INT8 worker —
         at seed time, by a steal, by a hotplug rebalance, or on engine
-        removal.  Mixed-pool panels are additionally pinned to the
-        deterministic LPT seed (stealable=False) — stealing a panel
-        across precision classes would make the merged numerics a
-        function of thread timing.  Accounting-only ``submit`` traffic
-        (serving proxies) keeps stealing across the whole pool."""
+        removal.
+
+        An opted-in GEMM whose activation scale has been calibrated takes
+        the **int32-partial path** instead: the activations quantize ONCE
+        at submit time, every panel computes the raw int8×int8 int32
+        accumulator (exact integer math — bitwise identical on every
+        engine, so these panels steal freely even across precision
+        classes), and the merge concatenates the partials and applies the
+        shared ``dequant_finish`` exactly once.  The submission also
+        feeds the calibrator, so the first decode split calibrates and
+        the rest run quantized.
+
+        Otherwise mixed-pool panels are pinned to the deterministic LPT
+        seed (stealable=False) — stealing an fp32 panel across precision
+        classes would make the merged numerics a function of thread
+        timing — and panels landing on a quantized engine run its
+        weight-only fallback (never the order-dependent online fast
+        path).  Accounting-only ``submit`` traffic (serving proxies)
+        keeps stealing across the whole pool."""
         import jax.numpy as jnp
         ts_m = jobset.ts_m
         m = a.shape[0]
         gm, gn = jobset.grid
         j = next(jobset.jobs())
         final_dtype = out_dtype or a.dtype
+        int8_ok = _admits_int8(job_class)
+
+        plan = self._plan_int8_split(a, b) if int8_ok else None
+        if plan is not None:
+            qw, act_scale, a_q = plan
+            tile_t = tile if isinstance(tile, tuple) else (tile,) * 3
+
+            def make_qfn(r0: int, r1: int):
+                def fn(eng: Engine):
+                    fn8 = getattr(eng, "execute_int8", None)
+                    if fn8 is not None:
+                        return fn8(a_q[r0:r1], qw, tile=tile_t)
+                    # any engine can compute the exact integer partial
+                    # through the shared kernel (steals/hotplug-safe)
+                    from repro.kernels.qmm import qmm_matmul
+                    return qmm_matmul(a_q[r0:r1], qw.q, qw.scale,
+                                      fuse_dequant=False, tile=tile_t)
+                return fn
+
+            units = [(make_qfn(t1 * ts_m, min((t1 + 1) * ts_m, m)),
+                      gn, j.macs, j.bytes_moved) for t1 in range(gm)]
+
+            def merge_q(parts: list):
+                from repro.quant.quantize import dequant_finish
+                acc = (parts[0] if len(parts) == 1
+                       else jnp.concatenate(parts, 0))
+                return dequant_finish(acc, qw, act_scale=act_scale,
+                                      bias=bias, activation=activation,
+                                      out_dtype=final_dtype)
+
+            return self._submit_jobs(jobset, units, merge_q, affinity,
+                                     stealable=True, int8_ok=True)
 
         def make_fn(r0: int, r1: int):
             def fn(eng: Engine):
-                return eng.execute(a[r0:r1], b, bias=bias,
-                                   activation=activation, tile=tile,
-                                   out_dtype=jnp.float32,
-                                   precision=precision)
+                ex = getattr(eng, "execute_weight_only", eng.execute)
+                return ex(a[r0:r1], b, bias=bias,
+                          activation=activation, tile=tile,
+                          out_dtype=jnp.float32,
+                          precision=precision)
             return fn
 
         units = []
@@ -623,7 +734,6 @@ class SynergyRuntime:
             y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
             return y.astype(final_dtype)
 
-        int8_ok = _admits_int8(job_class)
         # the mixed check and the enqueue must be one atomic step: a
         # hotplug between them would enqueue stealable panels into a
         # now-mixed pool and break the determinism pin (the Condition's
@@ -633,6 +743,33 @@ class SynergyRuntime:
             return self._submit_jobs(jobset, units, merge,
                                      None if mixed else affinity,
                                      stealable=not mixed, int8_ok=int8_ok)
+
+    def _plan_int8_split(self, a, b):
+        """Plan the shared quantization of an opted-in GEMM: observe the
+        live activations into the pool's quantized engine, and — once a
+        scale is published for this (k, n) shape — quantize activations
+        and weights ONCE for the whole split.  Returns
+        ``(qw, act_scale, a_q)`` or None (no quantized engine in the
+        pool, shape still warming up, or trace-time Tracers)."""
+        tracer = getattr(jax.core, "Tracer", ())
+        if isinstance(a, tracer) or isinstance(b, tracer):
+            return None
+        with self._lock:
+            engs = [w.engine for w in self._workers.values()]
+        qengs = [e for e in engs
+                 if CAP_INT8 in e.capabilities
+                 and hasattr(e, "execute_int8")
+                 and hasattr(e, "act_scale_for")]
+        if not qengs:
+            return None
+        qeng = qengs[0]
+        k, n = b.shape
+        qeng.observe_activations(a, k, n)    # decode feeds the calibrator
+        scale = qeng.act_scale_for(k, n)
+        if scale is None:
+            return None
+        from repro.quant.act import quantize_activations
+        return qeng.quantized(b), scale, quantize_activations(a, float(scale))
 
     def _mixed_precision_pool(self) -> bool:
         """True when the live pool mixes int8 and full-precision engines

@@ -1,0 +1,198 @@
+"""qmm: the int8×int8 Pallas kernel and its contract.
+
+Covers the structural claim of the whole PR — the contraction consumes
+int8 operands with int32 accumulation, NO fp32 upcast before the dot
+(jaxpr-proved on both the Pallas kernel and the off-TPU fallback) — plus
+numeric agreement between kernel, oracle and the fp32 reference, the
+fused dequant epilogue, border shapes, the raw int32 partial mode the
+runtime merges, and the exactness property that makes stolen panels
+bitwise-safe.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.qmm import qmm_matmul, qmm_ref
+from repro.quant import quantize_weights
+from repro.quant.act import one_shot_act_scale, quantize_activations
+
+
+def _quantized_operands(m, k, n, seed=0, wscale=0.05):
+    ka, kb = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(ka, (m, k))
+    w = jax.random.normal(kb, (k, n)) * wscale
+    qw = quantize_weights(w)
+    act_scale = one_shot_act_scale(a)
+    a_q = quantize_activations(a, act_scale)
+    return a, w, a_q, qw, act_scale
+
+
+def _all_dot_eqns(jaxpr):
+    """Every dot_general equation anywhere in a (possibly nested) jaxpr —
+    pallas_call, pjit and custom-call params are all descended into."""
+    found = []
+    stack = [jaxpr]
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "dot_general":
+                found.append(eqn)
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: hasattr(x, "eqns")):
+                    if hasattr(sub, "eqns"):
+                        stack.append(sub)
+                    elif hasattr(sub, "jaxpr"):
+                        stack.append(sub.jaxpr)
+        if hasattr(jx, "jaxpr"):
+            stack.append(jx.jaxpr)
+    return found
+
+
+# ------------------------------------------------------------ the proof
+
+@pytest.mark.parametrize("interpret", [False, True])
+def test_qmm_dot_consumes_int8_operands(interpret):
+    """THE acceptance claim: every contraction in the lowered qmm — the
+    Pallas kernel (interpret=True) and the off-TPU exact fallback alike —
+    takes int8 operands into an int32 accumulation.  No fp32 upcast
+    before the dot."""
+    _, _, a_q, qw, act_scale = _quantized_operands(16, 32, 24)
+    jaxpr = jax.make_jaxpr(
+        lambda a_q, q, s: qmm_matmul(a_q, q, s, act_scale=act_scale,
+                                     tile=(8, 8, 8),
+                                     interpret=interpret))(a_q, qw.q, qw.scale)
+    dots = _all_dot_eqns(jaxpr.jaxpr)
+    assert dots, "qmm lowered without any contraction"
+    for eqn in dots:
+        in_dtypes = [v.aval.dtype for v in eqn.invars]
+        assert all(d == jnp.int8 for d in in_dtypes), (
+            f"fp32-cast dot snuck back in: operands {in_dtypes}")
+        assert eqn.outvars[0].aval.dtype == jnp.int32
+        assert eqn.params.get("preferred_element_type") == jnp.int32
+
+
+def test_weight_only_path_is_the_fp32_cast_dot():
+    """Contrast check: the weight-only quant_gemm really is the upcast
+    dot the qmm path ends — same introspection, opposite verdict."""
+    from repro.quant import quant_gemm
+    a, w, _, qw, _ = _quantized_operands(16, 32, 24)
+    jaxpr = jax.make_jaxpr(lambda a: quant_gemm(a, qw))(a)
+    dots = _all_dot_eqns(jaxpr.jaxpr)
+    assert dots
+    assert all(v.aval.dtype == jnp.float32
+               for eqn in dots for v in eqn.invars)
+
+
+# ------------------------------------------------------------- numerics
+
+@pytest.mark.parametrize("shape", [(16, 32, 24),    # tile-aligned
+                                   (33, 70, 45),    # borders everywhere
+                                   (1, 129, 17)])   # single-token decode
+def test_kernel_matches_oracle(shape):
+    """Integer accumulation is exact, so kernel (interpret mode) and
+    oracle agree BITWISE on the accumulator; the fused fp32 epilogue may
+    differ by compiler FMA contraction only (ulp-level)."""
+    m, k, n = shape
+    _, _, a_q, qw, act_scale = _quantized_operands(m, k, n, seed=1)
+    acc_kernel = qmm_matmul(a_q, qw.q, qw.scale, fuse_dequant=False,
+                            tile=(16, 16, 16), interpret=True)
+    acc_ref = qmm_ref(a_q, qw.q, qw.scale, fuse_dequant=False)
+    np.testing.assert_array_equal(np.asarray(acc_kernel), np.asarray(acc_ref))
+    bias = jax.random.normal(jax.random.key(9), (n,))
+    y_kernel = qmm_matmul(a_q, qw.q, qw.scale, act_scale=act_scale,
+                          bias=bias, activation=jax.nn.relu,
+                          tile=(16, 16, 16), interpret=True)
+    y_ref = qmm_ref(a_q, qw.q, qw.scale, act_scale=act_scale, bias=bias,
+                    activation=jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_qmm_close_to_fp32_reference():
+    a, w, a_q, qw, act_scale = _quantized_operands(32, 64, 48, seed=2)
+    y = qmm_matmul(a_q, qw.q, qw.scale, act_scale=act_scale,
+                   tile=(16, 16, 16), interpret=True)
+    ref = a @ w
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_raw_int32_partials_merge_to_fused_output():
+    """The runtime's split mode: raw per-panel int32 accumulators,
+    concatenated, then ONE dequant_finish.  The panel accumulators stack
+    to the exact whole-GEMM accumulator (so the split never rounds
+    twice), and the merged output matches the fused single-call kernel
+    to epilogue-FMA precision."""
+    from repro.quant import dequant_finish
+    _, _, a_q, qw, act_scale = _quantized_operands(32, 24, 16, seed=3)
+    bias = jax.random.normal(jax.random.key(4), (16,))
+    parts = [qmm_matmul(a_q[r0:r0 + 8], qw.q, qw.scale,
+                        fuse_dequant=False, tile=(8, 8, 8), interpret=True)
+             for r0 in range(0, 32, 8)]
+    assert all(p.dtype == jnp.int32 for p in parts)
+    whole = qmm_matmul(a_q, qw.q, qw.scale, fuse_dequant=False,
+                       tile=(8, 8, 8), interpret=True)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(parts, 0)),
+                                  np.asarray(whole))
+    fused = qmm_matmul(a_q, qw.q, qw.scale, act_scale=act_scale,
+                       bias=bias, activation=jax.nn.relu, tile=(8, 8, 8),
+                       interpret=True)
+    merged = dequant_finish(jnp.concatenate(parts, 0), qw,
+                            act_scale=act_scale, bias=bias,
+                            activation=jax.nn.relu, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(merged),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_partials_are_engine_order_independent():
+    """Why stolen int8 panels are safe: the int32 accumulator of any
+    panel is a pure integer function of its inputs — fallback oracle and
+    interpreted kernel produce the identical array."""
+    _, _, a_q, qw, _ = _quantized_operands(8, 40, 12, seed=5)
+    via_ref = qmm_matmul(a_q, qw.q, qw.scale, fuse_dequant=False,
+                         tile=(8, 8, 8))           # off-TPU -> exact oracle
+    via_kernel = qmm_matmul(a_q, qw.q, qw.scale, fuse_dequant=False,
+                            tile=(8, 8, 8), interpret=True)
+    np.testing.assert_array_equal(np.asarray(via_ref), np.asarray(via_kernel))
+
+
+def test_fresh_act_scales_do_not_retrace():
+    """Regression: the online EMA republises a new float scale per live
+    batch; act_scale folds into the TRACED (1, n) scale operand, so a
+    decode loop reuses one compiled kernel instead of recompiling per
+    step."""
+    _, _, _, qw, _ = _quantized_operands(4, 32, 16, seed=6)
+    a = jax.random.normal(jax.random.key(7), (4, 32))
+    before = qmm_matmul._cache_size()
+    for s in (0.011, 0.012, 0.013, 0.014):
+        qmm_matmul(quantize_activations(a, s), qw.q, qw.scale,
+                   act_scale=s, tile=(8, 8, 8))
+    assert qmm_matmul._cache_size() - before <= 1
+
+
+def test_quant_gemm_fast_path_accepts_batched_activations():
+    """Regression: the weight-only fallback contracts over a_q.ndim - 1,
+    so 3-D activations must not start crashing the moment a shape's
+    scale publishes and flips it onto the kernel path."""
+    from repro.quant import quant_gemm
+    _, w, _, qw, _ = _quantized_operands(4, 32, 16, seed=8)
+    a3 = jax.random.normal(jax.random.key(9), (2, 4, 32))
+    s = one_shot_act_scale(a3)
+    y = quant_gemm(a3, qw, act_scale=s)
+    assert y.shape == (2, 4, 16)
+    ref = jnp.einsum("bmk,kn->bmn", a3, w)
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_out_dtype_and_saturation():
+    y = qmm_matmul(jnp.full((4, 8), 127, jnp.int8),
+                   jnp.full((8, 4), 127, jnp.int8),
+                   jnp.ones((1, 4)), act_scale=1.0, tile=(4, 4, 4),
+                   interpret=True, out_dtype=jnp.bfloat16)
+    assert y.dtype == jnp.bfloat16
+    # 8 * 127 * 127 accumulates exactly in int32 (no int8 overflow)
+    assert float(y[0, 0]) == pytest.approx(8 * 127 * 127, rel=1e-2)

@@ -1,13 +1,18 @@
-"""Property tests for the quant subsystem (ISSUE 3 satellite).
+"""Property tests for the quant subsystem (ISSUE 3 + ISSUE 4 satellites).
 
-Two invariants, hypothesis-driven:
+Hypothesis-driven invariants:
 
   * the int8 quantize -> dequant reconstruction error stays within the
     calibrated per-channel bound (scale/2 per element) across random GEMM
     shapes and weight scales;
+  * the int8×int8 ``quant_gemm`` error obeys the COMPOSED bound — the
+    activation-scale and weight-scale error terms add (plus their cross
+    term), each capped by its own scale/2;
+  * seeded activation-scale calibration is deterministic across runs,
+    and so are the int8×int8 outputs it parameterizes;
   * runtime split/merge over a MIXED-precision pool is deterministic
-    given a seed — the precision-pinned LPT seed makes the merged output
-    a pure function of (inputs, pool), never of thread timing.
+    given a seed — the merged output is a pure function of (inputs,
+    pool), never of thread timing.
 """
 
 import jax
@@ -20,8 +25,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.job import JobSet                         # noqa: E402
 from repro.engines.sim import SIM_ENGINE_SPECS, SimPEEngine  # noqa: E402
-from repro.quant import (QuantizedEngine, dequantize_weights,  # noqa: E402
-                         quant_gemm, quantize_weights)
+from repro.quant import (ActCalibrator, QuantizedEngine,  # noqa: E402
+                         dequantize_weights, one_shot_act_scale,
+                         quant_gemm, quantize_activations,
+                         quantize_weights)
 from repro.soc import SynergyRuntime                      # noqa: E402
 
 
@@ -53,11 +60,67 @@ def test_quant_gemm_error_tracks_weight_scale(m, k, n, seed):
     assert bool(jnp.all(jnp.abs(y_q - y_f) <= bound + 1e-5))
 
 
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 32), k=st.integers(1, 64), n=st.integers(1, 64),
+       wscale=st.floats(1e-3, 2.0), seed=st.integers(0, 2**16))
+def test_int8x8_error_within_composed_scale_bound(m, k, n, wscale, seed):
+    """ISSUE 4 satellite: the int8×int8 path's error decomposes as
+    ``da @ w + a @ dw + da @ dw`` with |da| <= act_scale/2 per element
+    and |dw_kj| <= w_scale_j/2, so per output element
+
+        |y_q - y_f| <= (s_a/2) * sum_k|w_kj| + sum_k|a_ik| * (s_wj/2)
+                       + k * (s_a/2) * (s_wj/2).
+    """
+    ka, kb = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(ka, (m, k))
+    w = jax.random.normal(kb, (k, n)) * wscale
+    qw = quantize_weights(w)
+    s_a = one_shot_act_scale(a)
+    y_q = quant_gemm(a, qw, act_scale=s_a)
+    y_f = jnp.dot(a, w)
+    half_sa, half_sw = s_a / 2.0, qw.scale / 2.0        # (1, n)
+    bound = (half_sa * jnp.sum(jnp.abs(w), axis=0, keepdims=True)
+             + jnp.sum(jnp.abs(a), axis=1, keepdims=True) * half_sw
+             + k * half_sa * half_sw)
+    slack = 1e-5 * (1.0 + float(jnp.max(jnp.abs(y_f))))
+    assert bool(jnp.all(jnp.abs(y_q - y_f) <= bound + slack))
+
+
+@settings(max_examples=10, deadline=None)
+@given(batches=st.integers(1, 6), k=st.integers(1, 48),
+       n=st.integers(1, 48), seed=st.integers(0, 2**16))
+def test_seeded_act_calibration_deterministic_across_runs(batches, k, n,
+                                                          seed):
+    """ISSUE 4 satellite: feeding the same seeded batch sequence into two
+    fresh calibrators yields bit-identical scales, quantizations and
+    int8×int8 outputs — online calibration is a pure fold."""
+    def calibrated_scale():
+        cal = ActCalibrator()
+        key = jax.random.key(seed)
+        for i in range(batches):
+            key, kk = jax.random.split(key)
+            cal.observe(jax.random.normal(kk, (4, k)) * (1 + i), (k, n))
+        return cal.scale_for((k, n))
+
+    s1, s2 = calibrated_scale(), calibrated_scale()
+    assert s1 == s2 and s1 is not None
+    ka, kb = jax.random.split(jax.random.key(seed + 1))
+    a = jax.random.normal(ka, (3, k))
+    qw = quantize_weights(jax.random.normal(kb, (k, n)) * 0.1)
+    assert np.array_equal(np.asarray(quantize_activations(a, s1)),
+                          np.asarray(quantize_activations(a, s2)))
+    assert np.array_equal(np.asarray(quant_gemm(a, qw, act_scale=s1)),
+                          np.asarray(quant_gemm(a, qw, act_scale=s2)))
+
+
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 2**16), panels=st.integers(2, 12))
 def test_mixed_pool_split_merge_deterministic_given_seed(seed, panels):
     """Same seed -> same inputs -> bitwise-identical merged output, every
-    run, despite two engines of different precision racing for work."""
+    run, despite two engines of different precision racing for work.
+    (Since ISSUE 4 the decode-class split quantizes once at submit and
+    panels compute EXACT int32 partials — determinism now survives even
+    cross-precision stealing, instead of relying on the LPT pin.)"""
     fp32 = SimPEEngine(f"prop-fp32-{seed}", SIM_ENGINE_SPECS["F-PE"])
     int8 = QuantizedEngine(fp32, name=f"prop-int8-{seed}")
     ka, kb = jax.random.split(jax.random.key(seed))
