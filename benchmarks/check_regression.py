@@ -23,9 +23,13 @@ import sys
 #: row fields that identify a row within a benchmark's table
 _ROW_KEYS = ("net", "pool", "mode", "design", "leg", "shape")
 
-#: numeric fields treated as simulated-fps claims
+#: numeric fields treated as simulated-fps claims.  ``tokens_per_s_rel``
+#: is the serving-throughput gate (ISSUE 5): each serve mode's tokens/s
+#: RELATIVE to the per-request baseline measured in the same run — a
+#: machine-stable ratio (both legs share the host), unlike the raw
+#: ``tokens_per_s_wall`` fields, which stay ungated wall-clock telemetry.
 _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
-               "fpga_fps", "het_fps")
+               "fpga_fps", "het_fps", "tokens_per_s_rel")
 
 
 def load_run(path: str) -> dict:

@@ -52,6 +52,22 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
     return patches.reshape(n, oh * ow, kh * kw * c)
 
 
+def im2col_wave(x: jax.Array, kh: int, kw: int, stride: int = 1,
+                padding: int = 0) -> jax.Array:
+    """Batched multi-image im2col for a serving admission wave.
+
+    x: (N, H, W, C) — ALL frames of the wave stacked along the batch axis
+    (every admitted request's frames together) — returns the flattened
+    (N*OH*OW, KH*KW*C) GEMM activation panel in one call.  The point is
+    the amortization: ONE gather (and one memoized index-grid lookup, see
+    :func:`_patch_index_grids`) covers the whole wave, instead of one
+    gather per request; the panel feeds a single batched conv GEMM whose
+    row-panel split the runtime then spreads across the pool."""
+    n = x.shape[0]
+    patches = im2col(x, kh, kw, stride, padding)
+    return patches.reshape(n * patches.shape[1], patches.shape[2])
+
+
 def conv_out_shape(h: int, w: int, kh: int, kw: int, stride: int,
                    padding: int) -> tuple[int, int]:
     return ((h + 2 * padding - kh) // stride + 1,

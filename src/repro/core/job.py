@@ -91,6 +91,21 @@ class JobSet:
         return cls(layer_id=layer_id, m=m, n=n, k=k,
                    ts_m=ts_m, ts_n=ts_n, ts_k=ts_k, name=name)
 
+    @classmethod
+    def for_conv(cls, layer_id: int, n_frames: int, h: int, w: int,
+                 cin: int, cout: int, kernel: int, stride: int = 1,
+                 padding: int = 0, tile: int | tuple[int, int, int] = 32,
+                 name: str = "") -> "JobSet":
+        """The im2col GEMM of one CONV layer over an ``n_frames`` image
+        batch (§3.1.1): ``m = n_frames * oh * ow``, ``k = kernel² * cin``,
+        ``n = cout`` — the REAL conv-as-GEMM shape the serving prefill
+        path and the DES both account (one source of truth, so server
+        busy-seconds and simulator busy-seconds agree by construction)."""
+        oh = (h + 2 * padding - kernel) // stride + 1
+        ow = (w + 2 * padding - kernel) // stride + 1
+        return cls.for_gemm(layer_id, n_frames * oh * ow, cout,
+                            kernel * kernel * cin, tile, name=name)
+
     @property
     def grid(self) -> tuple[int, int]:
         return (ceil_div(self.m, self.ts_m), ceil_div(self.n, self.ts_n))

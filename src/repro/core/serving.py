@@ -2,19 +2,34 @@
 granularity.
 
 The paper's heterogeneous job mix maps directly onto LLM serving: PREFILL
-requests are large compute-bound tile-job sets, DECODE steps are small
-memory-bound jobs.  Both are expressed as engine job classes
-(:class:`PrefillJob` / :class:`DecodeJob`) whose :class:`JobSet` views feed
-the same :class:`~repro.engines.Dispatcher` every other GEMM in the
-framework uses, so per-step engine routing and busy-time accounting come
-from the shared registry cost models.
+requests are large compute-bound conv-as-GEMM job sets (the CNN front-end
+of the SoC — every prompt token becomes one frame through a
+:mod:`repro.configs.paper_cnns` network, lowered to im2col + GEMM exactly
+like §3.1.1), DECODE steps are small memory-bound jobs.  Both are
+expressed as engine job classes (:class:`PrefillJob` / :class:`DecodeJob`)
+whose :class:`JobSet` views feed the same
+:class:`~repro.engines.Dispatcher` every other GEMM in the framework uses,
+so per-step engine routing and busy-time accounting come from the shared
+registry cost models.
 
-The engine keeps a fixed-slot decode batch (the "cluster") and, like the
-thief thread, fills idle capacity from the pending-request queue: when
-slots are free it runs a prefill (admits a request), otherwise it advances
-the whole batch one decode step.  The slot batch keeps shapes static
-(jit-friendly); finished requests free their slot immediately (inter-frame
-pipelining at token granularity).
+Batching and asynchrony (ISSUE 5):
+
+* **Admission waves** — ``step()`` admits *every* pending request up to the
+  free slots (``min(pending, free)``) in ONE wave: one batched LM replay
+  for the whole wave (per-slot masked positions keep bystanders
+  untouched), one stacked frame batch through the conv front-end, ONE
+  im2col gather per conv layer (:func:`repro.core.im2col.im2col_wave`).
+* **Coalesced decode** — the per-step decode folds every live slot's proxy
+  GEMM into ONE ``(live·n_layers, d_model) @ (d_model, 4·d_model)``
+  runtime submission whose row-panel split amortizes dispatch overhead;
+  ``decode_mode="per-slot"`` keeps the sequential per-slot loop as the
+  measured baseline (bitwise-identical output — the int32-partial int8
+  path is exact integer math, and fp32 row reductions are row-independent).
+* **In-flight window** — runtime submissions are reaped through a bounded
+  FIFO (``max_inflight``), so submissions of step *t* overlap compute of
+  step *t−1*; completion is reaped in submission order (ordered per slot),
+  and the activation calibrator is fed at REAP time from a device-side
+  ``max|a|`` launched at submit (no host sync on the hot path).
 
 Cache discipline (continuous batching): every step passes PER-SLOT
 positions to ``decode_step`` — a slot's K/V rows are written only at that
@@ -24,22 +39,42 @@ another request's prefill) are never written at all.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.engines import CAP_INT8, Dispatcher, Engine, find_engine
 
+from .im2col import conv_out_shape, im2col_wave
 from .job import JobSet
 
 __all__ = ["Request", "PrefillJob", "DecodeJob", "ServeStats",
-           "SynergyServer"]
+           "ServeTimeoutError", "SynergyServer"]
 
 #: tile for the serving-side job accounting (decode GEMMs are tiny; the
 #: paper-faithful TS=32 keeps their jobsets non-degenerate)
 _SERVE_TILE = 32
+
+
+class ServeTimeoutError(RuntimeError):
+    """A runtime submission missed the server's ``submit_timeout``.
+
+    Carries the jobset name and the per-engine accounting booked so far,
+    so the operator sees WHICH submission stalled and how much of it each
+    engine had already executed — not a bare futures error."""
+
+    def __init__(self, jobset_name: str, timeout: float, accounting: dict):
+        self.jobset_name = jobset_name
+        self.timeout = timeout
+        self.accounting = dict(accounting)
+        done = {name: a.get("jobs", 0) for name, a in self.accounting.items()}
+        super().__init__(
+            f"serving submission {jobset_name!r} not done in {timeout}s "
+            f"(per-engine jobs completed so far: {done or 'none'})")
 
 
 @dataclasses.dataclass
@@ -56,29 +91,33 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class PrefillJob:
-    """Admit one request into a slot: a compute-bound tile-job set (the
-    prompt's full-sequence GEMMs)."""
+    """Admit one WAVE of requests: the wave's frames through the conv
+    front-end, as real conv-as-GEMM JobSets (one per CONV layer, batched
+    over every frame of every admitted request — no proxy GEMM)."""
 
-    rid: int
-    slot: int
-    n_tokens: int
-    d_model: int
-    n_layers: int
+    wave: int
+    rids: tuple[int, ...]
+    slots: tuple[int, ...]
+    n_frames: int
+    cnn: object                # repro.models.cnn.CNNConfig
 
     kind = "prefill"
 
-    def jobset(self) -> JobSet:
-        # per-request proxy GEMM: (prompt tokens x d_model) @ (d_model x
-        # ~4*d_model) per layer, folded into one JobSet (m scales with
-        # layers so estimates stay comparable across models)
-        return JobSet.for_gemm(self.rid, self.n_tokens * self.n_layers,
-                               4 * self.d_model, self.d_model, _SERVE_TILE,
-                               name=f"prefill/r{self.rid}")
+    def jobsets(self) -> list[JobSet]:
+        """The wave's per-CONV-layer im2col GEMM JobSets — the same
+        shapes :func:`repro.models.cnn.build_simnet` exports to the DES,
+        so server prefill busy-seconds and simulator busy-seconds read
+        one cost model over one job decomposition."""
+        from repro.models.cnn import conv_jobsets
+        return [js for _, js in
+                conv_jobsets(self.cnn, self.n_frames,
+                             name_prefix=f"prefill/w{self.wave}/")]
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeJob:
-    """Advance every live slot one token: a small memory-bound job set."""
+    """Advance every live slot one token: ONE coalesced memory-bound job
+    set covering the whole live batch (per-layer GEMMs stacked along m)."""
 
     step: int
     slots: tuple[int, ...]     # live slot indices this step serves
@@ -97,8 +136,12 @@ class DecodeJob:
 class ServeStats:
     engine_steps: int = 0
     prefills: int = 0
+    #: admission waves executed (prefills / prefill_waves = mean wave size)
+    prefill_waves: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
+    #: deepest the async in-flight window got (0 = fully synchronous)
+    inflight_peak: int = 0
     #: dispatcher accounting per job class: estimated engine-busy seconds
     job_busy_s: dict = dataclasses.field(
         default_factory=lambda: {"prefill": 0.0, "decode": 0.0})
@@ -119,21 +162,132 @@ class ServeStats:
         return self.tokens_out / max(1, self.decode_steps)
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One outstanding serving submission in the reap window."""
+
+    kind: str                       # "prefill" | "decode"
+    futures: list
+    chain: object = None            # _ConvChain (real conv prefill)
+    cal_engine: object = None       # engine whose calibrator reap feeds
+    amax: object = None             # device-side max|acts| (decode)
+    cal_key: Optional[tuple] = None  # (k, n) batch-shape key
+    layout: Optional[tuple] = None   # (live, n_layers) result stitching
+
+
+class _ConvChain:
+    """In-flight real conv-as-GEMM prefill of one admission wave.
+
+    The first CONV layer's GEMM is submitted immediately (workers crunch
+    it while the host replays the LM prompt and serves later steps); the
+    continuation — host-side pooling plus the remaining per-layer
+    submissions, each preceded by ONE :func:`im2col_wave` gather over the
+    whole wave — runs when the server reaps the window slot.  Layer
+    dependencies are inherent (layer *l+1* gathers layer *l*'s output),
+    so the chain blocks per layer only at reap time, never on the admit
+    path."""
+
+    def __init__(self, server: "SynergyServer", frames: jax.Array,
+                 job: PrefillJob, jobsets: list[JobSet],
+                 affinity: Optional[str]):
+        self._srv = server
+        self._x = frames
+        self._affinity = affinity
+        shapes, _ = job.cnn.trace_shapes()
+        self._steps = []
+        for i, (spec, *_rest) in enumerate(shapes):
+            if spec[0] == "fc":       # conv front-end only: fc is host-side
+                break
+            self._steps.append((i, spec))
+        conv_layers = [i for i, spec in self._steps if spec[0] == "conv"]
+        self._jobsets = dict(zip(conv_layers, jobsets))
+        self._pos = 0
+        self.future: object = None
+        self._shape_out: Optional[tuple] = None
+        self._advance()
+
+    def _advance(self) -> None:
+        """Apply host stages up to the next CONV, then submit its GEMM
+        (one batched gather for the whole wave) and return non-blocking."""
+        self.future = None
+        while self._pos < len(self._steps):
+            i, spec = self._steps[self._pos]
+            if spec[0] == "pool":
+                from repro.models.cnn import maxpool2d
+                self._x = maxpool2d(self._x, spec[1])
+                self._pos += 1
+                continue
+            _, cout, k, s, p = spec
+            n, h, w, _ = self._x.shape
+            oh, ow = conv_out_shape(h, w, k, k, s, p)
+            a = im2col_wave(self._x, k, k, s, p)
+            params = self._srv._cnn_params
+            js = self._jobsets[i]
+            self._shape_out = (n, oh, ow, cout)
+            self.future = self._srv.runtime.submit_gemm(
+                a, params[f"conv{i}_w"].reshape(-1, cout), jobset=js,
+                bias=params[f"conv{i}_b"], activation=jax.nn.relu,
+                tile=(js.ts_m, js.ts_n, js.ts_k), job_class="prefill",
+                affinity=self._affinity)
+            return
+
+    def reap(self) -> None:
+        while self.future is not None:
+            fut = self.future
+            y = self._srv._fut_result(fut)
+            self._srv._book_runtime("prefill", fut.accounting)
+            self._x = y.reshape(self._shape_out)
+            self._pos += 1
+            self._advance()
+
+
 class SynergyServer:
     """cfg: reduced/real ArchConfig; params: model params.
 
-    slots: decode batch size (static); max_len: cache depth."""
+    slots: decode batch size (static); max_len: cache depth;
+    prefill_cnn: the :class:`~repro.models.cnn.CNNConfig` whose CONV
+    layers are the prefill front-end (default: the paper's MNIST net);
+    admission: ``"wave"`` admits min(pending, free slots) per step,
+    ``"single"`` keeps the legacy one-request-per-step baseline;
+    decode_mode: ``"batched"`` coalesces the live slots into one runtime
+    GEMM, ``"per-slot"`` submits one GEMM per slot (the baseline);
+    max_inflight: bound of the async submit/reap window (0 = synchronous);
+    submit_timeout: seconds a runtime submission may stay outstanding
+    before :class:`ServeTimeoutError`;
+    keep_decode_outputs: retain each step's reaped decode-GEMM output in
+    ``decode_gemm_outputs`` (canonical (live, n_layers, 4·d_model) layout
+    in BOTH decode modes — how the bitwise-identity tests compare them).
+    """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 64,
                  prefill_len: int = 16,
                  dispatcher: Optional[Dispatcher] = None,
-                 runtime=None):
+                 runtime=None,
+                 prefill_cnn=None,
+                 admission: str = "wave",
+                 decode_mode: str = "batched",
+                 max_inflight: int = 2,
+                 submit_timeout: float = 60.0,
+                 keep_decode_outputs: bool = False):
         from repro.models import decode_step, init_cache
+        from repro.models.cnn import init_cnn
+        if admission not in ("wave", "single"):
+            raise ValueError(f"admission must be 'wave'|'single': {admission!r}")
+        if decode_mode not in ("batched", "per-slot"):
+            raise ValueError(
+                f"decode_mode must be 'batched'|'per-slot': {decode_mode!r}")
+        if max_inflight < 0:
+            raise ValueError(f"max_inflight must be >= 0: {max_inflight!r}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.prefill_len = prefill_len
+        self.admission = admission
+        self.decode_mode = decode_mode
+        self.max_inflight = max_inflight
+        self.submit_timeout = submit_timeout
+        self.keep_decode_outputs = keep_decode_outputs
         self.cache = init_cache(cfg, slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_pos = [0] * slots
@@ -146,6 +300,18 @@ class SynergyServer:
         self.runtime = runtime
         if runtime is not None:
             runtime.start()
+        if prefill_cnn is None:
+            from repro.configs.paper_cnns import MNIST
+            prefill_cnn = MNIST
+        self.prefill_cnn = prefill_cnn
+        self._cnn_params = init_cnn(prefill_cnn, jax.random.key(0))
+        #: the decode proxy weight: each layer's (d_model, 4·d_model) GEMM
+        #: on the live token embeddings, stacked along m per layer
+        self._decode_w = (jax.random.normal(
+            jax.random.key(0xD0), (cfg.d_model, 4 * cfg.d_model))
+            * 0.05).astype(jnp.float32)
+        self._inflight: collections.deque[_Inflight] = collections.deque()
+        self.decode_gemm_outputs: list = []
 
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
@@ -154,20 +320,19 @@ class SynergyServer:
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                return i
-        return None
+    def reset_stats(self) -> None:
+        """Fresh counters (benchmark repetitions reuse a warmed server)."""
+        self.stats = ServeStats()
+        self.decode_gemm_outputs = []
 
     # --------------------------------------------------------------- engine
     def step(self) -> bool:
-        """One engine step: prefill-if-capacity else decode.  Returns True
-        if any work was done."""
+        """One engine step: admit a prefill WAVE if there is capacity,
+        else advance the whole decode batch one token.  Returns True if
+        any work was done (in-flight submissions may still be
+        outstanding — ``run()``/``drain()`` reap them)."""
         self.stats.engine_steps += 1
-        slot = self._free_slot()
-        if self.pending and slot is not None:
-            self._do_prefill(self.pending.pop(0), slot)
+        if self._admit_wave():
             return True
         if any(r is not None for r in self.slot_req):
             self._do_decode()
@@ -179,7 +344,40 @@ class SynergyServer:
             if not self.step():
                 break
             max_steps -= 1
+        self.drain()
         return self.stats
+
+    def drain(self) -> ServeStats:
+        """Reap every outstanding in-flight submission (call before
+        shutting down the runtime — reaping a prefill chain may submit
+        its remaining conv layers)."""
+        while self._inflight:
+            self._reap_one()
+        return self.stats
+
+    # ------------------------------------------------------------ admission
+    def _admit_wave(self) -> int:
+        """Admit ``min(pending, free slots)`` requests in ONE wave (one
+        batched LM replay + one conv-front-end batch); ``"single"``
+        admission caps the wave at 1 (the legacy baseline)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        n = min(len(self.pending), len(free))
+        if self.admission == "single":
+            n = min(n, 1)
+        if n == 0:
+            return 0
+        # validate BEFORE popping: a bad request mid-wave must not drop
+        # the wave members already taken off the pending queue
+        wave = []
+        for j, slot in enumerate(free[:n]):
+            req = self.pending[j]
+            toks = req.tokens[: self.prefill_len]
+            if toks.shape[0] == 0:
+                raise ValueError(f"request {req.rid}: empty prompt")
+            wave.append((req, slot, toks))
+        del self.pending[:n]
+        self._do_prefill_wave(wave)
+        return n
 
     # ------------------------------------------------------------ internals
     @staticmethod
@@ -187,129 +385,282 @@ class SynergyServer:
         return ("int8" if engine is not None
                 and CAP_INT8 in engine.capabilities else "fp32")
 
-    def _account(self, job) -> Optional[Engine]:
-        """Route the job class' JobSet: through the runtime (tile jobs
-        submitted, stolen, booked per executing engine) when one is
-        attached, else whole to the dispatcher's pick.  Either way the
-        precision-routing policy applies — ``job.kind`` is the dispatcher
-        job class, so DECODE steps land on registered int8 engines while
-        prefill stays on grad-safe full-precision paths — and per-precision
-        job counts land in ``ServeStats.precision_jobs``.  Returns the
-        policy-selected engine (the runtime path returns the seed-hint
-        engine) so decode can feed its activation calibrator."""
-        js = job.jobset()
-        if self.runtime is not None:
-            # queue-affinity hint: seed on the policy's choice (int8 for
-            # decode when one is registered), let idle engines steal tiles
-            try:
-                hint_eng = self.dispatcher.select(js, job_class=job.kind)
-                hint = hint_eng.name
-            except RuntimeError:
-                hint_eng, hint = None, None
-            fut = self.runtime.submit(js, affinity=hint)
-            fut.result(timeout=60.0)
-            acct = fut.accounting
-            total = sum(a["est_s"] for a in acct.values())
-            self.stats.job_busy_s[job.kind] += total
-            if acct:
-                dominant = max(acct, key=lambda n: acct[n]["jobs"])
-                self.stats.job_engine[job.kind] = dominant
-            for name, a in acct.items():
-                # pool engines need not be registry entries: resolve from
-                # the runtime's live pool first, the registry second
-                eng = self.runtime.find_engine(name) or find_engine(name)
-                self.stats.precision_jobs[self._precision_class(eng)] \
-                    += a["jobs"]
-            self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
-            self.stats.runtime_steals += sum(a["steals"]
-                                             for a in acct.values())
-            return hint_eng
-        eng = self.dispatcher.select(js, job_class=job.kind)
+    def _affinity_hint(self, js: JobSet, kind: str) -> Optional[Engine]:
+        """The dispatcher's policy pick for this job class — the runtime
+        queue-affinity hint (int8 for decode when one is registered)."""
+        try:
+            return self.dispatcher.select(js, job_class=kind)
+        except RuntimeError:
+            return None
+
+    def _account_dispatch(self, kind: str, js: JobSet) -> Engine:
+        """No-runtime path: route the JobSet whole to the dispatcher's
+        pick and book its cost-model estimate."""
+        eng = self.dispatcher.select(js, job_class=kind)
         est = eng.estimate(js)
         eng.telemetry.record(js, est)
-        self.stats.job_busy_s[job.kind] += est
-        self.stats.job_engine[job.kind] = eng.name
+        self.stats.job_busy_s[kind] += est
+        self.stats.job_engine[kind] = eng.name
         self.stats.precision_jobs[self._precision_class(eng)] += js.num_jobs
         return eng
 
+    def _book_runtime(self, kind: str, acct: dict) -> None:
+        """Book one reaped runtime submission's per-engine accounting."""
+        self.stats.job_busy_s[kind] += sum(a["est_s"] for a in acct.values())
+        if acct:
+            dominant = max(acct, key=lambda n: acct[n]["jobs"])
+            self.stats.job_engine[kind] = dominant
+        for name, a in acct.items():
+            # pool engines need not be registry entries: resolve from
+            # the runtime's live pool first, the registry second
+            eng = self.runtime.find_engine(name) or find_engine(name)
+            self.stats.precision_jobs[self._precision_class(eng)] \
+                += a["jobs"]
+        self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
+        self.stats.runtime_steals += sum(a["steals"] for a in acct.values())
+
+    def _fut_result(self, fut):
+        try:
+            return fut.result(timeout=self.submit_timeout)
+        except TimeoutError:
+            raise ServeTimeoutError(fut.jobset.name, self.submit_timeout,
+                                    fut.accounting) from None
+
+    # ------------------------------------------------------ in-flight window
+    def _push_inflight(self, inf: _Inflight) -> None:
+        self._inflight.append(inf)
+        while len(self._inflight) > self.max_inflight:
+            self._reap_one()
+        # peak is measured AFTER eviction: what stays outstanding past
+        # the step (0 = fully synchronous, matching the field docs)
+        self.stats.inflight_peak = max(self.stats.inflight_peak,
+                                       len(self._inflight))
+
+    def _reap_one(self) -> None:
+        """Reap the OLDEST in-flight submission (FIFO — completions are
+        booked in submission order, so per-slot accounting stays ordered),
+        book its accounting, and feed the activation calibrator from the
+        device-side ``max|a|`` launched at submit."""
+        inf = self._inflight.popleft()
+        if inf.chain is not None:
+            inf.chain.reap()
+        results = [self._fut_result(f) for f in inf.futures]
+        for fut in inf.futures:
+            self._book_runtime(inf.kind, fut.accounting)
+        if inf.kind == "decode" and inf.layout is not None:
+            live, nl = inf.layout
+            n4 = inf.cal_key[1]
+            if len(results) == 1:      # batched: (nl·live, 4d) row-major
+                y = results[0].reshape(nl, live, n4).transpose(1, 0, 2)
+            else:                      # per-slot: one (nl, 4d) per slot
+                y = jnp.stack(results, 0)
+            if self.keep_decode_outputs:
+                self.decode_gemm_outputs.append(y)
+            eng = inf.cal_engine
+            if (eng is not None and inf.amax is not None
+                    and hasattr(eng, "observe_amax")):
+                eng.observe_amax(float(inf.amax), *inf.cal_key)
+
+    def _calibration_engine(self) -> Optional[Engine]:
+        """The live pool's quantized engine (whose calibrator gates the
+        runtime's int8 split), if any."""
+        if self.runtime is None:
+            return None
+        for name in self.runtime.engine_names:
+            eng = self.runtime.find_engine(name)
+            if eng is not None and hasattr(eng, "observe_amax"):
+                return eng
+        return None
+
+    def _has_fp32_engine(self) -> bool:
+        """Whether the pool can execute grad-safe (non-int8) prefill
+        panels — real conv compute needs one; otherwise prefill books
+        accounting jobsets only."""
+        for name in self.runtime.engine_names:
+            eng = self.runtime.find_engine(name)
+            if eng is not None and CAP_INT8 not in eng.capabilities:
+                return True
+        return False
+
+    # -------------------------------------------------------------- prefill
+    def _wave_frames(self, toks: jax.Array) -> Optional[jax.Array]:
+        """The wave's conv-front-end input: each prompt token becomes one
+        (H, W, Cin) frame by tiling its embedding row — the vision-encoder
+        analog (deterministic, so prefill numerics are reproducible).
+        None when the params carry no embedding table (accounting-only
+        prefill)."""
+        embed = (self.params.get("embed")
+                 if isinstance(self.params, dict) else None)
+        if embed is None:
+            return None
+        c = self.prefill_cnn
+        hwc = c.input_hw * c.input_hw * c.cin
+        vecs = embed[toks].astype(jnp.float32)            # (N, d_model)
+        reps = -(-hwc // vecs.shape[1])
+        flat = jnp.tile(vecs, (1, reps))[:, :hwc]
+        return flat.reshape(vecs.shape[0], c.input_hw, c.input_hw, c.cin)
+
+    def _submit_prefill(self, job: PrefillJob,
+                        frames: Optional[jax.Array]) -> None:
+        """Route the wave's conv JobSets: REAL im2col+GEMM chain through
+        the runtime when the pool can run grad-safe panels, a single
+        batched accounting submission (``submit_many`` — one lock, one
+        LPT pass, one wakeup for the whole wave) otherwise, and plain
+        dispatcher estimates without a runtime."""
+        jobsets = job.jobsets()
+        if not jobsets:
+            return
+        if self.runtime is None:
+            for js in jobsets:
+                self._account_dispatch("prefill", js)
+            return
+        hint_eng = self._affinity_hint(jobsets[0], "prefill")
+        hint = hint_eng.name if hint_eng is not None else None
+        if frames is not None and self._has_fp32_engine():
+            chain = _ConvChain(self, frames, job, jobsets, hint)
+            self._push_inflight(_Inflight("prefill", [], chain=chain))
+        else:
+            futs = self.runtime.submit_many(jobsets, affinity=hint)
+            self._push_inflight(_Inflight("prefill", futs))
+
+    def _do_prefill_wave(self, wave: list) -> None:
+        lens = [int(toks.shape[0]) for _, _, toks in wave]
+        slots = [slot for _, slot, _ in wave]
+        self.stats.prefill_waves += 1
+        # conv front-end FIRST: workers crunch the wave's first conv layer
+        # while the host replays the LM prompt below (ARM-side /
+        # accelerator-side overlap, §4.3)
+        job = PrefillJob(self.stats.prefill_waves,
+                         tuple(r.rid for r, _, _ in wave), tuple(slots),
+                         n_frames=sum(lens), cnn=self.prefill_cnn)
+        frames = self._wave_frames(
+            jnp.concatenate([toks for _, _, toks in wave]))
+        self._submit_prefill(job, frames)
+
+        # slot reuse: zero the admitted slots' cache rows (every cache
+        # tensor — K/V and SSM states alike — carries batch at axis 1).
+        # Attention masks stale K/V anyway; recurrent SSM state NEEDS the
+        # reset or a reused slot would continue the previous recurrence.
+        sl = jnp.array(slots)
+        self.cache = jax.tree.map(
+            lambda a: a.at[:, sl].set(jnp.zeros_like(a[:, sl])), self.cache)
+
+        # batched LM replay: ONE jitted decode call per token index covers
+        # the WHOLE wave (each admitted slot at its own position; slots
+        # not being admitted — live decoders included — stay masked -1, so
+        # their K/V and SSM state are never written).
+        span = max(lens)
+        tok_np = np.zeros((span, self.slots, 1), np.int32)
+        pos_np = np.full((span, self.slots), -1, np.int32)
+        for (req, slot, toks), ln in zip(wave, lens):
+            tok_np[:ln, slot, 0] = np.asarray(toks[:ln], np.int32)
+            pos_np[:ln, slot] = np.arange(ln)
+        last_row = {}
+        for i in range(span):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tok_np[i]),
+                jnp.asarray(pos_np[i]))
+            for (req, slot, toks), ln in zip(wave, lens):
+                if i == ln - 1:    # the prompt's last-token logits
+                    last_row[slot] = logits[slot, -1]
+        firsts = np.asarray(jnp.argmax(
+            jnp.stack([last_row[slot] for _, slot, _ in wave]), axis=-1))
+        for j, ((req, slot, toks), ln) in enumerate(zip(wave, lens)):
+            req.out.append(int(firsts[j]))
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = ln
+            self.stats.prefills += 1
+
+    # --------------------------------------------------------------- decode
     def _slot_positions(self) -> jnp.ndarray:
         """(slots,) int32 of per-slot cache positions; -1 for empty slots."""
         return jnp.array(
             [self.slot_pos[i] if r is not None else -1
              for i, r in enumerate(self.slot_req)], jnp.int32)
 
-    def _do_prefill(self, req: Request, slot: int) -> None:
-        # The prompt replays through the decode path one token at a time
-        # (single jitted program keeps this example simple; a production
-        # prefill writes the cache in one pass).  Positions are per-slot:
-        # ONLY the target slot's position is set, so live requests in other
-        # slots keep their KV cache entries untouched.
-        toks = req.tokens[: self.prefill_len]
-        if toks.shape[0] == 0:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        self._account(PrefillJob(req.rid, slot, int(toks.shape[0]),
-                                 self.cfg.d_model, self.cfg.n_layers))
-        # slot reuse: zero the slot's cache rows (every cache tensor —
-        # K/V and SSM states alike — carries batch at axis 1).  Attention
-        # masks stale K/V anyway; recurrent SSM state NEEDS the reset or a
-        # reused slot would continue the previous request's recurrence.
-        self.cache = jax.tree.map(
-            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
-            self.cache)
-        logits = None
-        for i in range(toks.shape[0]):
-            tok = (jnp.zeros((self.slots, 1), jnp.int32)
-                   .at[slot, 0].set(toks[i].astype(jnp.int32)))
-            pos = jnp.full((self.slots,), -1, jnp.int32).at[slot].set(i)
-            logits, self.cache = self._decode(
-                self.params, self.cache, tok, pos)
-        # the prompt's last-token logits seed the first generated token
-        first = int(jnp.argmax(logits[slot, -1]))
-        req.out.append(first)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = int(toks.shape[0])
-        self.stats.prefills += 1
-
-    def _feed_act_calibrator(self, eng: Optional[Engine],
-                             toks: jnp.ndarray,
-                             live: tuple[int, ...]) -> None:
-        """Decode feeds the activation calibrator: the step's LIVE-slot
-        token embeddings are the activation panel of the decode GEMMs,
-        so observing them per step converges the quantized engine's
-        per-shape EMA online (keyed by the serving proxy GEMM's (k, n) =
-        (d_model, 4*d_model), the same key the runtime's int8 split
-        consults).  Empty slots are excluded — their padding token-0
-        embeddings are not traffic, and a large embed[0] row would
-        inflate the max|a| EMA and waste int8 resolution on an artifact.
-        A plain fp32 engine has no calibrator — no-op."""
-        if eng is None or not hasattr(eng, "observe_activations") or not live:
-            return
+    def _live_embeddings(self, toks: jnp.ndarray,
+                         live: tuple[int, ...]) -> Optional[jax.Array]:
+        """The step's LIVE-slot token embeddings — the activation panel of
+        the decode proxy GEMMs.  Empty slots are excluded: their padding
+        token-0 embeddings are not traffic, and a large embed[0] row would
+        inflate the max|a| EMA and waste int8 resolution on an artifact."""
         embed = (self.params.get("embed")
                  if isinstance(self.params, dict) else None)
-        if embed is None:
+        if embed is None or not live:
+            return None
+        return embed[toks[jnp.array(live), 0]].astype(jnp.float32)
+
+    def _submit_decode(self, job: DecodeJob,
+                       acts: Optional[jax.Array]) -> None:
+        js = job.jobset()
+        hint_eng = self._affinity_hint(js, "decode")
+        hint = hint_eng.name if hint_eng is not None else None
+        if acts is None:
+            # no embedding table: accounting-only coalesced submission
+            fut = self.runtime.submit(js, affinity=hint)
+            self._push_inflight(_Inflight("decode", [fut]))
             return
-        acts = embed[toks[jnp.array(live), 0]]
-        eng.observe_activations(acts, self.cfg.d_model, 4 * self.cfg.d_model)
+        d, n4, nl = self.cfg.d_model, 4 * self.cfg.d_model, self.cfg.n_layers
+        cal = self._calibration_engine()
+        if cal is None and hasattr(hint_eng, "observe_amax"):
+            cal = hint_eng
+        # device-side max|a| launched NOW, folded into the EMA at reap —
+        # skipped entirely when nothing will consume it (fp32-only pool)
+        amax = jnp.max(jnp.abs(acts)) if cal is not None else None
+        if self.decode_mode == "batched":
+            # ONE coalesced submission: every live slot's per-layer GEMM
+            # stacked along m — the row-panel split amortizes dispatch
+            futs = [self.runtime.submit_gemm(
+                jnp.tile(acts, (nl, 1)), self._decode_w, jobset=js,
+                tile=(_SERVE_TILE,) * 3, job_class="decode",
+                affinity=hint, observe_acts=False)]
+        else:
+            # the sequential per-slot baseline (one submission per slot)
+            futs = []
+            for j, slot in enumerate(job.slots):
+                js_j = JobSet.for_gemm(
+                    job.step, nl, n4, d, _SERVE_TILE,
+                    name=f"decode/s{job.step}/slot{slot}")
+                futs.append(self.runtime.submit_gemm(
+                    jnp.tile(acts[j:j + 1], (nl, 1)), self._decode_w,
+                    jobset=js_j, tile=(_SERVE_TILE,) * 3,
+                    job_class="decode", affinity=hint, observe_acts=False))
+        self._push_inflight(_Inflight(
+            "decode", futs, cal_engine=cal, amax=amax, cal_key=(d, n4),
+            layout=(len(job.slots), nl)))
 
     def _do_decode(self) -> None:
         live = tuple(i for i, r in enumerate(self.slot_req) if r is not None)
-        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        # ONE host->device transfer for the step's token batch (per-slot
+        # .at[] updates would dispatch an eager op per live slot per step)
+        toks_np = np.zeros((self.slots, 1), np.int32)
         for i, r in enumerate(self.slot_req):
             if r is not None and r.out:
-                toks = toks.at[i, 0].set(r.out[-1])
-        eng = self._account(DecodeJob(self.stats.decode_steps, live,
-                                      self.cfg.d_model, self.cfg.n_layers))
-        self._feed_act_calibrator(eng, toks, live)
+                toks_np[i, 0] = r.out[-1]
+        toks = jnp.asarray(toks_np)
+        job = DecodeJob(self.stats.decode_steps, live, self.cfg.d_model,
+                        self.cfg.n_layers)
+        acts = self._live_embeddings(toks, live)
+        if self.runtime is not None:
+            self._submit_decode(job, acts)
+        else:
+            eng = self._account_dispatch("decode", job.jobset())
+            if acts is not None and hasattr(eng, "observe_activations"):
+                eng.observe_activations(acts, self.cfg.d_model,
+                                        4 * self.cfg.d_model)
         # per-slot positions: each live slot reads/writes at ITS OWN index
         # (a shared max(pos) would smear late-arriving requests' tokens
         # into earlier requests' cache rows); empty slots are masked (-1)
         pos = self._slot_positions()
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         self.stats.decode_steps += 1
+        # ONE device argmax + ONE host sync for the whole batch (a
+        # per-slot int(jnp.argmax(...)) costs an eager op + sync per slot)
+        nxt_all = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
-            nxt = int(jnp.argmax(logits[i, -1]))
+            nxt = int(nxt_all[i])
             r.out.append(nxt)
             self.slot_pos[i] += 1
             self.stats.tokens_out += 1

@@ -26,7 +26,17 @@ from repro.core.scheduler import SimLayer, SimNet
 from repro.core.synergy_mm import synergy_matmul
 
 __all__ = ["CNNConfig", "init_cnn", "cnn_forward", "build_simnet",
-           "cnn_flops_per_frame"]
+           "conv_jobsets", "maxpool2d", "cnn_flops_per_frame"]
+
+
+def maxpool2d(x: jax.Array, size: int) -> jax.Array:
+    """Non-overlapping max pool (stride == size), cropping odd edges —
+    the paper's CPU-side pooling (§3.1.4).  ONE implementation shared by
+    ``cnn_forward`` and the serving prefill chain, so their activations
+    cannot silently diverge."""
+    n, h, w, c = x.shape
+    x = x[:, : h - h % size, : w - w % size, :]
+    return x.reshape(n, h // size, size, w // size, size, c).max(axis=(2, 4))
 
 # layer spec forms:
 #   ("conv", cout, k, stride, pad)
@@ -135,10 +145,7 @@ def _cnn_forward(cfg: CNNConfig, params: dict, x: jax.Array, *,
                                s, p, cfg.tile, f"{cfg.name}/conv{i}",
                                engine=engine, job_class=job_class)
         elif spec[0] == "pool":
-            size = spec[1]
-            n, h, w, c = x.shape
-            x = x[:, : h - h % size, : w - w % size, :]
-            x = x.reshape(n, h // size, size, w // size, size, c).max(axis=(2, 4))
+            x = maxpool2d(x, spec[1])
         elif spec[0] == "fc":
             n = x.shape[0]
             x = x.reshape(n, -1)
@@ -164,6 +171,32 @@ def cnn_flops_per_frame(cfg: CNNConfig) -> int:
     return total
 
 
+def conv_jobsets(cfg: CNNConfig, n_frames: int = 1, *,
+                 tile: int | tuple | None = None,
+                 name_prefix: str = "") -> list[tuple[int, JobSet]]:
+    """The per-CONV-layer im2col GEMM JobSets of an ``n_frames`` image
+    batch: ``[(layer_index, JobSet), ...]`` in network order.
+
+    This is the ONE conv-as-GEMM shape source shared by the DES exporter
+    (:func:`build_simnet`, ``n_frames=1``) and the serving prefill path
+    (``n_frames`` = all frames of an admission wave), so server prefill
+    busy-seconds and simulator busy-seconds read the same cost model over
+    the same jobs by construction."""
+    out: list[tuple[int, JobSet]] = []
+    shapes, _ = cfg.trace_shapes()
+    conv_id = 0
+    for i, (spec, h, w, c) in enumerate(shapes):
+        if spec[0] != "conv":
+            continue
+        _, cout, k, s, p = spec
+        js = JobSet.for_conv(conv_id, n_frames, h, w, c, cout, k, s, p,
+                             tile if tile is not None else cfg.tile,
+                             name=f"{name_prefix}{cfg.name}/conv{i}")
+        out.append((i, js))
+        conv_id += 1
+    return out
+
+
 def build_simnet(cfg: CNNConfig) -> SimNet:
     """Export as a SimNet for the discrete-event runtime simulator.
 
@@ -174,18 +207,16 @@ def build_simnet(cfg: CNNConfig) -> SimNet:
     # normalization / scaling preprocessing (§3.1.4)
     n_in_elems = cfg.input_hw * cfg.input_hw * cfg.cin
     layers.append(SimLayer("norm", "cpu", cpu_ops=4 * n_in_elems))
-    conv_id = 0
+    # DES layer names are bare conv{i} (no net prefix): keep them stable
+    conv_js = {i: dataclasses.replace(js, name=f"conv{i}")
+               for i, js in conv_jobsets(cfg)}
     for i, (spec, h, w, c) in enumerate(shapes):
         if spec[0] == "conv":
-            _, cout, k, s, p = spec
-            oh, ow = conv_out_shape(h, w, k, k, s, p)
-            m, n_, kk = oh * ow, cout, k * k * c
-            js = JobSet.for_gemm(conv_id, m, n_, kk, cfg.tile,
-                                 name=f"conv{i}")
+            js = conv_js[i]
             # im2col writes m*k floats (fp32), reads input once
             layers.append(SimLayer(f"conv{i}", "conv", jobset=js,
-                                   im2col_bytes=4 * (m * kk + h * w * c)))
-            conv_id += 1
+                                   im2col_bytes=4 * (js.m * js.k
+                                                     + h * w * c)))
         elif spec[0] == "pool":
             size = spec[1]
             layers.append(SimLayer(f"pool{i}", "cpu",

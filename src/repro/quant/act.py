@@ -101,7 +101,18 @@ class ActCalibrator:
         on a cadence instead of every batch."""
         if isinstance(a, jax.core.Tracer):
             return self._scales.get(key)
-        amax = float(jnp.max(jnp.abs(a)))
+        return self.observe_amax(float(jnp.max(jnp.abs(a))), key)
+
+    def observe_amax(self, amax: float, key: Hashable) -> ActScale:
+        """Fold one precomputed per-batch ``max|a|`` into ``key``'s EMA.
+
+        This is the ASYNC half of :meth:`observe`: a submit phase can
+        launch the ``jnp.max(jnp.abs(a))`` reduction on device (no host
+        sync) and fold the float here at reap time — the serving engine's
+        in-flight window does exactly that, so the decode hot path never
+        blocks on a calibration sync.  The fold itself is the same pure
+        EMA, so submit-time and reap-time feeding produce bit-identical
+        scale trajectories for the same observation sequence."""
         with self._lock:
             prev = self._scales.get(key)
             if prev is None:

@@ -129,6 +129,13 @@ class QuantizedEngine(Engine):
         if self.calibrator is not None:
             self.calibrator.observe(a, self.act_key(k, n))
 
+    def observe_amax(self, amax: float, k: int, n: int) -> None:
+        """Reap-time feed: fold a precomputed batch ``max|a|`` into the
+        (k, n) shape's EMA (the serving in-flight window computes the
+        reduction on device at submit and folds the float here)."""
+        if self.calibrator is not None:
+            self.calibrator.observe_amax(float(amax), self.act_key(k, n))
+
     def act_scale_for(self, k: int, n: int) -> Optional[float]:
         """The published activation scale for a (k, n) GEMM shape, or
         None while it is warming up (weight-only fallback applies)."""

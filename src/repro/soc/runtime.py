@@ -622,30 +622,71 @@ class SynergyRuntime:
             self._cond.notify_all()
         return sub.future
 
+    @staticmethod
+    def _accounting_units(jobset, granularity: str) -> list[tuple]:
+        """The (fn=None, n_jobs, macs, bytes) scheduling units of one
+        accounting-only JobSet at ``"job"`` or ``"row"`` granularity."""
+        j = next(jobset.jobs()) if jobset.num_jobs else None
+        if j is None:
+            return []
+        if granularity == "job":
+            return [(None, 1, j.macs, j.bytes_moved)] * jobset.num_jobs
+        gm, gn = jobset.grid        # "row": one unit per grid row of tiles
+        return [(None, gn, j.macs, j.bytes_moved)] * gm
+
     def submit(self, jobset, *, affinity: Optional[str] = None,
                granularity: str = "job") -> RuntimeFuture:
         """Accounting-only submission: the JobSet's tile jobs are scheduled
         (and stolen) across the pool, booking cost-model busy time per
         engine, with no array compute.  This is how serving prefill/decode
         proxies flow through the runtime."""
-        j = next(jobset.jobs()) if jobset.num_jobs else None
-        if j is None:
-            units = []
-        elif granularity == "job":
-            units = [(None, 1, j.macs, j.bytes_moved)] * jobset.num_jobs
-        else:                       # "row": one unit per grid row of tiles
-            gm, gn = jobset.grid
-            units = [(None, gn, j.macs, j.bytes_moved)] * gm
-        if not units:
-            fut = RuntimeFuture(jobset)
-            fut._finish(None, None)
-            return fut
-        return self._submit_jobs(jobset, units, None, affinity)
+        return self.submit_many([jobset], affinity=affinity,
+                                granularity=granularity)[0]
+
+    def submit_many(self, jobsets, *, affinity: Optional[str] = None,
+                    granularity: str = "job") -> list[RuntimeFuture]:
+        """Batched accounting submission — the server-scale amortization
+        path (ISSUE 5 §4): every JobSet of one admission wave goes through
+        ONE manager-lock acquisition, one LPT seeding pass over ALL the
+        batch's jobs, and one worker wakeup, instead of a lock + seed +
+        notify per request.  Each jobset still completes as its own
+        submission (own future, own accounting, own recalibration-cadence
+        tick), so callers reap per-request accounting exactly as with N
+        separate :meth:`submit` calls — only the dispatch overhead is
+        shared.  Empty jobsets return already-finished futures in place."""
+        futs: list[RuntimeFuture] = []
+        jobs: list[_RuntimeJob] = []
+        n_live = 0
+        for jobset in jobsets:
+            units = self._accounting_units(jobset, granularity)
+            if not units:
+                fut = RuntimeFuture(jobset)
+                fut._finish(None, None)
+                futs.append(fut)
+                continue
+            sub = _Submission(jobset, len(units), None,
+                              on_done=self._on_submission_done)
+            jobs.extend(_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes)
+                        for i, (fn, n_jobs, macs, nbytes)
+                        in enumerate(units))
+            futs.append(sub.future)
+            n_live += 1
+        if n_live:
+            with self._cond:
+                if not self._started:
+                    raise RuntimeError(
+                        f"runtime {self.name!r} is not started")
+                self._submissions += n_live
+                self._inflight += n_live
+                self._seed_locked(jobs, affinity)
+                self._cond.notify_all()
+        return futs
 
     def submit_gemm(self, a, b, *, jobset, bias=None, activation=None,
                     tile=(256, 256, 256), out_dtype=None, precision=None,
                     affinity: Optional[str] = None,
-                    job_class: Optional[str] = None) -> RuntimeFuture:
+                    job_class: Optional[str] = None,
+                    observe_acts: bool = True) -> RuntimeFuture:
         """Split one GEMM's tile jobs across the pool as row panels; the
         future's result is the merged ``act(A @ B + bias)``.
 
@@ -676,7 +717,15 @@ class SynergyRuntime:
         timing — and panels landing on a quantized engine run its
         weight-only fallback (never the order-dependent online fast
         path).  Accounting-only ``submit`` traffic (serving proxies)
-        keeps stealing across the whole pool."""
+        keeps stealing across the whole pool.
+
+        ``observe_acts=False`` skips the submit-time calibrator feed: a
+        caller that controls its own calibration cadence (the serving
+        engine observes ONCE per decode step at reap time, whether the
+        step went out as one coalesced GEMM or as per-slot submissions)
+        must not have every sub-submission fold an extra EMA update, or
+        batched and per-slot decode would calibrate — and therefore
+        quantize — differently."""
         import jax.numpy as jnp
         ts_m = jobset.ts_m
         m = a.shape[0]
@@ -685,7 +734,8 @@ class SynergyRuntime:
         final_dtype = out_dtype or a.dtype
         int8_ok = _admits_int8(job_class)
 
-        plan = self._plan_int8_split(a, b) if int8_ok else None
+        plan = (self._plan_int8_split(a, b, observe=observe_acts)
+                if int8_ok else None)
         if plan is not None:
             qw, act_scale, a_q = plan
             tile_t = tile if isinstance(tile, tuple) else (tile,) * 3
@@ -744,11 +794,12 @@ class SynergyRuntime:
                                      None if mixed else affinity,
                                      stealable=not mixed, int8_ok=int8_ok)
 
-    def _plan_int8_split(self, a, b):
+    def _plan_int8_split(self, a, b, observe: bool = True):
         """Plan the shared quantization of an opted-in GEMM: observe the
-        live activations into the pool's quantized engine, and — once a
-        scale is published for this (k, n) shape — quantize activations
-        and weights ONCE for the whole split.  Returns
+        live activations into the pool's quantized engine (unless the
+        caller feeds the calibrator itself — ``observe=False``), and —
+        once a scale is published for this (k, n) shape — quantize
+        activations and weights ONCE for the whole split.  Returns
         ``(qw, act_scale, a_q)`` or None (no quantized engine in the
         pool, shape still warming up, or trace-time Tracers)."""
         tracer = getattr(jax.core, "Tracer", ())
@@ -764,7 +815,8 @@ class SynergyRuntime:
             return None
         qeng = qengs[0]
         k, n = b.shape
-        qeng.observe_activations(a, k, n)    # decode feeds the calibrator
+        if observe:
+            qeng.observe_activations(a, k, n)  # decode feeds the calibrator
         scale = qeng.act_scale_for(k, n)
         if scale is None:
             return None

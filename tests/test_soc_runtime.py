@@ -317,6 +317,36 @@ def test_follow_registry_tracks_register_unregister():
         assert "hotplug" not in rt.engine_names
 
 
+# ---------------------------------------------------------- submit_many
+
+def test_submit_many_matches_individual_submissions():
+    """The batched accounting path (ONE lock/LPT-seed/wakeup per wave)
+    completes every jobset as its own submission with the same totals as
+    N individual submits; empty jobsets come back already finished."""
+    jobsets = [JobSet.for_gemm(i, 64 * (i + 1), 32, 48, 32, name=f"js{i}")
+               for i in range(4)]
+    empty = JobSet.for_gemm(9, 0, 32, 48, 32, name="empty")
+    with SynergyRuntime(["F-PE", "S-PE"], name="many") as rt:
+        futs = rt.submit_many(jobsets + [empty])
+        assert futs[-1].done()            # empty: finished in place
+        for fut, js in zip(futs, jobsets):
+            fut.result(60)
+            assert sum(a["jobs"] for a in fut.accounting.values()) \
+                == js.num_jobs
+            assert sum(a["est_s"] for a in fut.accounting.values()) > 0
+        stats = rt.stats()
+    # one submission per non-empty jobset, all jobs conserved
+    assert stats["submissions"] == len(jobsets)
+    assert stats["total_jobs"] == sum(js.num_jobs for js in jobsets)
+
+
+def test_submit_many_requires_started_runtime():
+    rt = SynergyRuntime(["F-PE"], name="cold")
+    js = JobSet.for_gemm(0, 64, 32, 48, 32)
+    with pytest.raises(RuntimeError, match="not started"):
+        rt.submit_many([js])
+
+
 # -------------------------------------------------------------- serving
 
 def test_server_routes_jobs_through_runtime():
