@@ -29,7 +29,8 @@ _ROW_KEYS = ("net", "pool", "mode", "design", "leg", "shape")
 #: machine-stable ratio (both legs share the host), unlike the raw
 #: ``tokens_per_s_wall`` fields, which stay ungated wall-clock telemetry.
 _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
-               "fpga_fps", "het_fps", "tokens_per_s_rel")
+               "fpga_fps", "het_fps", "tokens_per_s_rel",
+               "prefill_overlap_rel", "decode_p99_rel")
 
 
 def load_run(path: str) -> dict:

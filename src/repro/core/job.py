@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
-__all__ = ["Job", "JobSet", "ceil_div"]
+__all__ = ["Job", "JobSet", "ceil_div", "chunk_by_macs"]
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -147,6 +147,33 @@ class JobSet:
 
 def total_jobs(jobsets: Sequence[JobSet]) -> int:
     return sum(js.num_jobs for js in jobsets)
+
+
+def chunk_by_macs(jobsets: Sequence[JobSet],
+                  budget_macs: Optional[int]) -> list[list[int]]:
+    """Group consecutive jobsets into bounded-cost chunks: each chunk's
+    summed ``total_macs`` stays under ``budget_macs`` where possible (a
+    single jobset over budget still gets its own chunk — order is never
+    broken, so layer dependencies survive the split).  ``None`` or a
+    non-positive budget means ONE chunk.  Returns index groups, the unit
+    of chunked prefill: the serving engine submits one group per step so
+    a large admission wave cannot flood the queues ahead of decode."""
+    n = len(jobsets)
+    if not n:
+        return []
+    if not budget_macs or budget_macs <= 0:
+        return [list(range(n))]
+    chunks: list[list[int]] = []
+    cur: list[int] = []
+    cur_macs = 0
+    for i, js in enumerate(jobsets):
+        if cur and cur_macs + js.total_macs > budget_macs:
+            chunks.append(cur)
+            cur, cur_macs = [], 0
+        cur.append(i)
+        cur_macs += js.total_macs
+    chunks.append(cur)
+    return chunks
 
 
 def arithmetic_intensity(js: JobSet) -> float:

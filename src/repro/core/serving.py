@@ -19,22 +19,41 @@ Batching and asynchrony (ISSUE 5):
   for the whole wave (per-slot masked positions keep bystanders
   untouched), one stacked frame batch through the conv front-end, ONE
   im2col gather per conv layer (:func:`repro.core.im2col.im2col_wave`).
-* **Coalesced decode** — the per-step decode folds every live slot's proxy
-  GEMM into ONE ``(live·n_layers, d_model) @ (d_model, 4·d_model)``
-  runtime submission whose row-panel split amortizes dispatch overhead;
-  ``decode_mode="per-slot"`` keeps the sequential per-slot loop as the
-  measured baseline (bitwise-identical output — the int32-partial int8
-  path is exact integer math, and fp32 row reductions are row-independent).
+* **Coalesced decode** — the per-step decode folds every live slot's
+  per-layer FFN GEMM into ONE runtime submission whose row-panel split
+  amortizes dispatch overhead; when the model params expose stacked FFN
+  weights (``blocks.mlp.wi``), the REAL per-layer ``wi`` matrices are
+  stacked along n into one ``(d_model, n_layers·2·d_ff)`` weight — the
+  decode GEMM computes every layer's actual up-projection on the live
+  embeddings (a proxy weight remains the fallback for families without a
+  dense FFN stack).  ``decode_mode="per-slot"`` keeps the sequential
+  per-slot loop as the measured baseline (bitwise-identical output — the
+  int32-partial int8 path is exact integer math, and fp32 row reductions
+  are row-independent).
 * **In-flight window** — runtime submissions are reaped through a bounded
   FIFO (``max_inflight``), so submissions of step *t* overlap compute of
   step *t−1*; completion is reaped in submission order (ordered per slot),
   and the activation calibrator is fed at REAP time from a device-side
   ``max|a|`` launched at submit (no host sync on the hot path).
 
+Dataflow-graph prefill (ISSUE 6): the wave's conv front-end is ONE
+:meth:`~repro.soc.SynergyRuntime.submit_graph` DAG — layer *l+1*'s
+host-side im2col gather is a graph node gated on layer *l*'s GEMM, so the
+gather overlaps the *next* wave of GEMM panels instead of serializing at
+every reap.  With ``prefill_chunk_macs`` set, the wave's graph is split
+into bounded-cost chunks and the LM prompt replay into bounded token
+quanta, and ``step()`` interleaves one chunk with the coalesced decode
+GEMM — live decoders never stall behind a large admission
+(``ServeStats.prefill_chunks`` / ``decode_stall_steps`` expose the
+difference).
+
 Cache discipline (continuous batching): every step passes PER-SLOT
 positions to ``decode_step`` — a slot's K/V rows are written only at that
 slot's own position, and slots marked ``-1`` (idle, or bystanders during
-another request's prefill) are never written at all.
+another request's prefill) are never written at all.  Chunked prefill
+preserves this bitwise: replay quanta touch only the admitted wave's
+slots, decode steps touch only live slots, and the two sets are disjoint
+until the replay finalizes.
 """
 
 from __future__ import annotations
@@ -50,7 +69,7 @@ import numpy as np
 from repro.engines import CAP_INT8, Dispatcher, Engine, find_engine
 
 from .im2col import conv_out_shape, im2col_wave
-from .job import JobSet
+from .job import JobSet, chunk_by_macs
 
 __all__ = ["Request", "PrefillJob", "DecodeJob", "ServeStats",
            "ServeTimeoutError", "SynergyServer"]
@@ -117,16 +136,24 @@ class PrefillJob:
 @dataclasses.dataclass(frozen=True)
 class DecodeJob:
     """Advance every live slot one token: ONE coalesced memory-bound job
-    set covering the whole live batch (per-layer GEMMs stacked along m)."""
+    set covering the whole live batch.  With real stacked FFN weights the
+    GEMM is ``(live, d_model) @ (d_model, n_layers·ffn_cols)`` (per-layer
+    ``wi`` stacked along n); the proxy fallback stacks per-layer GEMMs
+    along m (``ffn_cols is None``)."""
 
     step: int
     slots: tuple[int, ...]     # live slot indices this step serves
     d_model: int
     n_layers: int
+    ffn_cols: Optional[int] = None   # per-layer FFN width (2·d_ff) | None
 
     kind = "decode"
 
     def jobset(self) -> JobSet:
+        if self.ffn_cols is not None:
+            return JobSet.for_gemm(
+                self.step, len(self.slots), self.n_layers * self.ffn_cols,
+                self.d_model, _SERVE_TILE, name=f"decode/s{self.step}")
         return JobSet.for_gemm(self.step, len(self.slots) * self.n_layers,
                                4 * self.d_model, self.d_model, _SERVE_TILE,
                                name=f"decode/s{self.step}")
@@ -142,6 +169,12 @@ class ServeStats:
     tokens_out: int = 0
     #: deepest the async in-flight window got (0 = fully synchronous)
     inflight_peak: int = 0
+    #: bounded-cost prefill chunks executed (conv graph chunks + LM replay
+    #: quanta) — 0 in legacy blocking-admission mode
+    prefill_chunks: int = 0
+    #: engine steps where live decoders sat idle behind a blocking
+    #: admission wave — chunked prefill drives this to 0
+    decode_stall_steps: int = 0
     #: dispatcher accounting per job class: estimated engine-busy seconds
     job_busy_s: dict = dataclasses.field(
         default_factory=lambda: {"prefill": 0.0, "decode": 0.0})
@@ -168,77 +201,50 @@ class _Inflight:
 
     kind: str                       # "prefill" | "decode"
     futures: list
-    chain: object = None            # _ConvChain (real conv prefill)
+    graph: object = None            # GraphFuture (real conv prefill DAG)
     cal_engine: object = None       # engine whose calibrator reap feeds
     amax: object = None             # device-side max|acts| (decode)
     cal_key: Optional[tuple] = None  # (k, n) batch-shape key
     layout: Optional[tuple] = None   # (live, n_layers) result stitching
+    wide: bool = False               # real-FFN n-stacked decode layout
 
 
-class _ConvChain:
-    """In-flight real conv-as-GEMM prefill of one admission wave.
+@dataclasses.dataclass
+class _ConvProgress:
+    """The chunked conv front-end of one admission wave: remaining
+    ``(steps, jobsets)`` chunks plus the carry between them (chunk *c+1*'s
+    first gather reshapes chunk *c*'s flat GEMM output)."""
 
-    The first CONV layer's GEMM is submitted immediately (workers crunch
-    it while the host replays the LM prompt and serves later steps); the
-    continuation — host-side pooling plus the remaining per-layer
-    submissions, each preceded by ONE :func:`im2col_wave` gather over the
-    whole wave — runs when the server reaps the window slot.  Layer
-    dependencies are inherent (layer *l+1* gathers layer *l*'s output),
-    so the chain blocks per layer only at reap time, never on the admit
-    path."""
+    wave: int
+    chunks: list                    # remaining [(steps, jobsets), ...]
+    x: jax.Array                    # carry: frames | previous flat output
+    in_shape: Optional[tuple]       # (N, H, W, C) restore for the carry
+    n_frames: int
+    hint: Optional[str]
+    total: int = 0                  # chunks at construction (for naming)
+    idx: int = 0                    # next chunk index
+    fut: object = None              # outstanding GraphFuture
 
-    def __init__(self, server: "SynergyServer", frames: jax.Array,
-                 job: PrefillJob, jobsets: list[JobSet],
-                 affinity: Optional[str]):
-        self._srv = server
-        self._x = frames
-        self._affinity = affinity
-        shapes, _ = job.cnn.trace_shapes()
-        self._steps = []
-        for i, (spec, *_rest) in enumerate(shapes):
-            if spec[0] == "fc":       # conv front-end only: fc is host-side
-                break
-            self._steps.append((i, spec))
-        conv_layers = [i for i, spec in self._steps if spec[0] == "conv"]
-        self._jobsets = dict(zip(conv_layers, jobsets))
-        self._pos = 0
-        self.future: object = None
-        self._shape_out: Optional[tuple] = None
-        self._advance()
+    @property
+    def done(self) -> bool:
+        return self.fut is None and not self.chunks
 
-    def _advance(self) -> None:
-        """Apply host stages up to the next CONV, then submit its GEMM
-        (one batched gather for the whole wave) and return non-blocking."""
-        self.future = None
-        while self._pos < len(self._steps):
-            i, spec = self._steps[self._pos]
-            if spec[0] == "pool":
-                from repro.models.cnn import maxpool2d
-                self._x = maxpool2d(self._x, spec[1])
-                self._pos += 1
-                continue
-            _, cout, k, s, p = spec
-            n, h, w, _ = self._x.shape
-            oh, ow = conv_out_shape(h, w, k, k, s, p)
-            a = im2col_wave(self._x, k, k, s, p)
-            params = self._srv._cnn_params
-            js = self._jobsets[i]
-            self._shape_out = (n, oh, ow, cout)
-            self.future = self._srv.runtime.submit_gemm(
-                a, params[f"conv{i}_w"].reshape(-1, cout), jobset=js,
-                bias=params[f"conv{i}_b"], activation=jax.nn.relu,
-                tile=(js.ts_m, js.ts_n, js.ts_k), job_class="prefill",
-                affinity=self._affinity)
-            return
 
-    def reap(self) -> None:
-        while self.future is not None:
-            fut = self.future
-            y = self._srv._fut_result(fut)
-            self._srv._book_runtime("prefill", fut.accounting)
-            self._x = y.reshape(self._shape_out)
-            self._pos += 1
-            self._advance()
+@dataclasses.dataclass
+class _PrefillProgress:
+    """One admission wave in flight under chunked prefill: the staged LM
+    replay arrays plus the conv-chunk chain.  ``step()`` advances one
+    bounded quantum per call and runs decode in the same step."""
+
+    wave: list                      # [(req, slot, toks), ...]
+    lens: list
+    span: int
+    tok_np: np.ndarray
+    pos_np: np.ndarray
+    conv: Optional[_ConvProgress]
+    last_row: dict = dataclasses.field(default_factory=dict)
+    tok_i: int = 0
+    finalized: bool = False
 
 
 class SynergyServer:
@@ -254,8 +260,11 @@ class SynergyServer:
     max_inflight: bound of the async submit/reap window (0 = synchronous);
     submit_timeout: seconds a runtime submission may stay outstanding
     before :class:`ServeTimeoutError`;
+    prefill_chunk_macs: when set, split each admission wave's conv graph
+    and LM replay into chunks of roughly this many MACs and interleave
+    them with decode — ``None`` keeps the legacy blocking admission;
     keep_decode_outputs: retain each step's reaped decode-GEMM output in
-    ``decode_gemm_outputs`` (canonical (live, n_layers, 4·d_model) layout
+    ``decode_gemm_outputs`` (canonical (live, n_layers, n_cols) layout
     in BOTH decode modes — how the bitwise-identity tests compare them).
     """
 
@@ -268,6 +277,7 @@ class SynergyServer:
                  decode_mode: str = "batched",
                  max_inflight: int = 2,
                  submit_timeout: float = 60.0,
+                 prefill_chunk_macs: Optional[int] = None,
                  keep_decode_outputs: bool = False):
         from repro.models import decode_step, init_cache
         from repro.models.cnn import init_cnn
@@ -287,6 +297,7 @@ class SynergyServer:
         self.decode_mode = decode_mode
         self.max_inflight = max_inflight
         self.submit_timeout = submit_timeout
+        self.prefill_chunk_macs = prefill_chunk_macs
         self.keep_decode_outputs = keep_decode_outputs
         self.cache = init_cache(cfg, slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
@@ -305,11 +316,11 @@ class SynergyServer:
             prefill_cnn = MNIST
         self.prefill_cnn = prefill_cnn
         self._cnn_params = init_cnn(prefill_cnn, jax.random.key(0))
-        #: the decode proxy weight: each layer's (d_model, 4·d_model) GEMM
-        #: on the live token embeddings, stacked along m per layer
-        self._decode_w = (jax.random.normal(
-            jax.random.key(0xD0), (cfg.d_model, 4 * cfg.d_model))
-            * 0.05).astype(jnp.float32)
+        self._decode_w = self._build_decode_weight(cfg, params)
+        #: slots reserved by an in-flight chunked admission: not live yet
+        #: (decode skips them) and not free (admission skips them)
+        self._prefilling: set[int] = set()
+        self._progress: Optional[_PrefillProgress] = None
         self._inflight: collections.deque[_Inflight] = collections.deque()
         self.decode_gemm_outputs: list = []
 
@@ -327,17 +338,33 @@ class SynergyServer:
 
     # --------------------------------------------------------------- engine
     def step(self) -> bool:
-        """One engine step: admit a prefill WAVE if there is capacity,
-        else advance the whole decode batch one token.  Returns True if
-        any work was done (in-flight submissions may still be
-        outstanding — ``run()``/``drain()`` reap them)."""
+        """One engine step.  Legacy mode (``prefill_chunk_macs=None``):
+        admit a prefill WAVE if there is capacity, else advance the whole
+        decode batch one token.  Chunked mode: advance the in-flight
+        admission by one bounded chunk AND decode the live batch in the
+        SAME step.  Returns True if any work was done (in-flight
+        submissions may still be outstanding — ``run()``/``drain()``
+        reap them)."""
         self.stats.engine_steps += 1
-        if self._admit_wave():
-            return True
+        if self.prefill_chunk_macs is None:
+            live = any(r is not None for r in self.slot_req)
+            if self._admit_wave():
+                if live:
+                    self.stats.decode_stall_steps += 1
+                return True
+            if live:
+                self._do_decode()
+                return True
+            return False
+        worked = False
+        if self._progress is not None:
+            worked = self._advance_prefill(self._progress)
+        elif self._admit_wave():
+            worked = True
         if any(r is not None for r in self.slot_req):
             self._do_decode()
-            return True
-        return False
+            worked = True
+        return worked
 
     def run(self, until_drained: bool = True, max_steps: int = 10_000):
         while max_steps > 0:
@@ -348,9 +375,21 @@ class SynergyServer:
         return self.stats
 
     def drain(self) -> ServeStats:
-        """Reap every outstanding in-flight submission (call before
-        shutting down the runtime — reaping a prefill chain may submit
-        its remaining conv layers)."""
+        """Finish any in-flight chunked admission (replay remainder plus
+        the conv chunk chain, blocking under ``submit_timeout``), then
+        reap every outstanding in-flight submission."""
+        prog = self._progress
+        if prog is not None:
+            if prog.tok_i < prog.span:
+                self._replay_span(prog, prog.tok_i, prog.span)
+                prog.tok_i = prog.span
+                self.stats.prefill_chunks += 1
+            if not prog.finalized:
+                self._finalize_replay(prog)
+            conv = prog.conv
+            while conv is not None and not conv.done:
+                self._harvest_conv_blocking(conv)
+            self._progress = None
         while self._inflight:
             self._reap_one()
         return self.stats
@@ -360,7 +399,8 @@ class SynergyServer:
         """Admit ``min(pending, free slots)`` requests in ONE wave (one
         batched LM replay + one conv-front-end batch); ``"single"``
         admission caps the wave at 1 (the legacy baseline)."""
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        free = [i for i, r in enumerate(self.slot_req)
+                if r is None and i not in self._prefilling]
         n = min(len(self.pending), len(free))
         if self.admission == "single":
             n = min(n, 1)
@@ -426,6 +466,17 @@ class SynergyServer:
             raise ServeTimeoutError(fut.jobset.name, self.submit_timeout,
                                     fut.accounting) from None
 
+    def _graph_result(self, gf):
+        """Block on one prefill graph; a timeout CANCELS the graph —
+        not-yet-started downstream nodes never launch and queued panels
+        are drained — before surfacing :class:`ServeTimeoutError`."""
+        try:
+            return gf.result(timeout=self.submit_timeout)
+        except TimeoutError:
+            gf.cancel("serving submit_timeout")
+            raise ServeTimeoutError(gf.name, self.submit_timeout,
+                                    gf.accounting) from None
+
     # ------------------------------------------------------ in-flight window
     def _push_inflight(self, inf: _Inflight) -> None:
         self._inflight.append(inf)
@@ -442,17 +493,25 @@ class SynergyServer:
         book its accounting, and feed the activation calibrator from the
         device-side ``max|a|`` launched at submit."""
         inf = self._inflight.popleft()
-        if inf.chain is not None:
-            inf.chain.reap()
+        if inf.graph is not None:
+            self._graph_result(inf.graph)
+            self._book_runtime(inf.kind, inf.graph.accounting)
         results = [self._fut_result(f) for f in inf.futures]
         for fut in inf.futures:
             self._book_runtime(inf.kind, fut.accounting)
         if inf.kind == "decode" and inf.layout is not None:
             live, nl = inf.layout
-            n4 = inf.cal_key[1]
-            if len(results) == 1:      # batched: (nl·live, 4d) row-major
-                y = results[0].reshape(nl, live, n4).transpose(1, 0, 2)
-            else:                      # per-slot: one (nl, 4d) per slot
+            n_cols = inf.cal_key[1]
+            if inf.wide:
+                # real-FFN n-stacked layout: rows are slots already
+                n_per = n_cols // nl
+                if len(results) == 1:  # batched: (live, nl·n_per)
+                    y = results[0].reshape(live, nl, n_per)
+                else:                  # per-slot: one (1, nl·n_per) each
+                    y = jnp.stack([r.reshape(nl, n_per) for r in results], 0)
+            elif len(results) == 1:    # proxy batched: (nl·live, 4d)
+                y = results[0].reshape(nl, live, n_cols).transpose(1, 0, 2)
+            else:                      # proxy per-slot: one (nl, 4d) each
                 y = jnp.stack(results, 0)
             if self.keep_decode_outputs:
                 self.decode_gemm_outputs.append(y)
@@ -500,28 +559,96 @@ class SynergyServer:
         flat = jnp.tile(vecs, (1, reps))[:, :hwc]
         return flat.reshape(vecs.shape[0], c.input_hw, c.input_hw, c.cin)
 
+    def _im2col(self, x, kh, kw, stride, pad):
+        """Wave gather indirection: resolves ``im2col_wave`` through THIS
+        module's globals at call time, so instrumentation (tests count
+        one gather per conv layer) hooks the serving module as before."""
+        return im2col_wave(x, kh, kw, stride, pad)
+
     def _submit_prefill(self, job: PrefillJob,
-                        frames: Optional[jax.Array]) -> None:
-        """Route the wave's conv JobSets: REAL im2col+GEMM chain through
-        the runtime when the pool can run grad-safe panels, a single
-        batched accounting submission (``submit_many`` — one lock, one
-        LPT pass, one wakeup for the whole wave) otherwise, and plain
-        dispatcher estimates without a runtime."""
+                        frames: Optional[jax.Array]) -> Optional[_ConvProgress]:
+        """Route the wave's conv JobSets: a REAL im2col+GEMM dataflow
+        graph through the runtime when the pool can run grad-safe panels
+        (chunked into a :class:`_ConvProgress` chain when
+        ``prefill_chunk_macs`` is set, else one graph reaped through the
+        in-flight window), a single batched accounting submission
+        (``submit_many``) otherwise, and plain dispatcher estimates
+        without a runtime.  Returns the in-flight chunk chain, if any."""
         jobsets = job.jobsets()
         if not jobsets:
-            return
+            return None
         if self.runtime is None:
             for js in jobsets:
                 self._account_dispatch("prefill", js)
-            return
+            return None
         hint_eng = self._affinity_hint(jobsets[0], "prefill")
         hint = hint_eng.name if hint_eng is not None else None
         if frames is not None and self._has_fp32_engine():
-            chain = _ConvChain(self, frames, job, jobsets, hint)
-            self._push_inflight(_Inflight("prefill", [], chain=chain))
-        else:
-            futs = self.runtime.submit_many(jobsets, affinity=hint)
-            self._push_inflight(_Inflight("prefill", futs))
+            from repro.models.cnn import conv_graph_steps
+            steps = conv_graph_steps(self.prefill_cnn)
+            groups = chunk_by_macs(jobsets, self.prefill_chunk_macs)
+            conv = _ConvProgress(
+                job.wave,
+                [([steps[i] for i in g], [jobsets[i] for i in g])
+                 for g in groups],
+                frames, None, job.n_frames, hint, total=len(groups))
+            self._submit_conv_chunk(conv)
+            if self.prefill_chunk_macs is None:
+                # legacy: ONE graph for the whole wave, reaped (and
+                # cancelled on timeout) through the in-flight window
+                self._push_inflight(_Inflight("prefill", [], graph=conv.fut))
+                return None
+            return conv
+        futs = self.runtime.submit_many(jobsets, affinity=hint)
+        self._push_inflight(_Inflight("prefill", futs))
+        return None
+
+    def _submit_conv_chunk(self, conv: _ConvProgress) -> None:
+        """Build and submit the next chunk's dataflow graph (gather and
+        GEMM nodes per conv layer, gathers gated on the previous layer's
+        GEMM so they overlap its panel execution)."""
+        from repro.models.cnn import conv_wave_graph
+        steps, jss = conv.chunks.pop(0)
+        nodes, edges = conv_wave_graph(
+            self.prefill_cnn, self._cnn_params, conv.x, steps, jss,
+            conv.n_frames, in_shape=conv.in_shape, affinity=conv.hint,
+            im2col_fn=self._im2col)
+        name = (f"prefill/w{conv.wave}" if conv.total == 1
+                else f"prefill/w{conv.wave}/c{conv.idx}")
+        conv.fut = self.runtime.submit_graph(nodes, edges,
+                                             affinity=conv.hint, name=name)
+        # the next chunk's first gather reshapes this chunk's flat output
+        oh, ow, cout = steps[-1][3]
+        conv.in_shape = (conv.n_frames, oh, ow, cout)
+        conv.idx += 1
+        if self.prefill_chunk_macs is not None:
+            self.stats.prefill_chunks += 1
+
+    def _advance_conv(self, conv: Optional[_ConvProgress]) -> bool:
+        """Non-blocking chunk-chain progression: harvest a finished chunk
+        graph (book accounting, take the carry) and submit the next."""
+        if conv is None or conv.done:
+            return False
+        if conv.fut is not None:
+            if not conv.fut.done():
+                return False
+            vals = conv.fut.result(0)
+            self._book_runtime("prefill", conv.fut.accounting)
+            conv.x = vals[-1]
+            conv.fut = None
+        if conv.chunks:
+            self._submit_conv_chunk(conv)
+        return True
+
+    def _harvest_conv_blocking(self, conv: _ConvProgress) -> None:
+        """Drain-path chunk harvest: block under ``submit_timeout``."""
+        if conv.fut is not None:
+            vals = self._graph_result(conv.fut)
+            self._book_runtime("prefill", conv.fut.accounting)
+            conv.x = vals[-1]
+            conv.fut = None
+        if conv.chunks:
+            self._submit_conv_chunk(conv)
 
     def _do_prefill_wave(self, wave: list) -> None:
         lens = [int(toks.shape[0]) for _, _, toks in wave]
@@ -535,7 +662,7 @@ class SynergyServer:
                          n_frames=sum(lens), cnn=self.prefill_cnn)
         frames = self._wave_frames(
             jnp.concatenate([toks for _, _, toks in wave]))
-        self._submit_prefill(job, frames)
+        conv = self._submit_prefill(job, frames)
 
         # slot reuse: zero the admitted slots' cache rows (every cache
         # tensor — K/V and SSM states alike — carries batch at axis 1).
@@ -555,23 +682,93 @@ class SynergyServer:
         for (req, slot, toks), ln in zip(wave, lens):
             tok_np[:ln, slot, 0] = np.asarray(toks[:ln], np.int32)
             pos_np[:ln, slot] = np.arange(ln)
-        last_row = {}
-        for i in range(span):
+        prog = _PrefillProgress(wave, lens, span, tok_np, pos_np, conv)
+        if self.prefill_chunk_macs is None:
+            self._replay_span(prog, 0, span)
+            self._finalize_replay(prog)
+            return
+        # chunked: reserve the slots and advance one quantum now; decode
+        # runs in the SAME engine step (the disjoint-slot masking above
+        # makes the interleave bitwise-invisible to live decoders)
+        self._prefilling.update(slots)
+        self._progress = prog
+        self._advance_prefill(prog)
+
+    def _replay_quantum(self, n_wave: int) -> int:
+        """Token indices one replay chunk may cover: the MAC budget over
+        the wave's per-token LM cost (~n_layers · 4·d_model² per slot)."""
+        per_tok = max(1, n_wave * self.cfg.n_layers
+                      * 4 * self.cfg.d_model * self.cfg.d_model)
+        return max(1, int(self.prefill_chunk_macs) // per_tok)
+
+    def _replay_span(self, prog: _PrefillProgress, i0: int, i1: int) -> None:
+        for i in range(i0, i1):
             logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tok_np[i]),
-                jnp.asarray(pos_np[i]))
-            for (req, slot, toks), ln in zip(wave, lens):
+                self.params, self.cache, jnp.asarray(prog.tok_np[i]),
+                jnp.asarray(prog.pos_np[i]))
+            for (req, slot, toks), ln in zip(prog.wave, prog.lens):
                 if i == ln - 1:    # the prompt's last-token logits
-                    last_row[slot] = logits[slot, -1]
+                    prog.last_row[slot] = logits[slot, -1]
+
+    def _finalize_replay(self, prog: _PrefillProgress) -> None:
         firsts = np.asarray(jnp.argmax(
-            jnp.stack([last_row[slot] for _, slot, _ in wave]), axis=-1))
-        for j, ((req, slot, toks), ln) in enumerate(zip(wave, lens)):
+            jnp.stack([prog.last_row[slot] for _, slot, _ in prog.wave]),
+            axis=-1))
+        for j, ((req, slot, toks), ln) in enumerate(zip(prog.wave,
+                                                        prog.lens)):
             req.out.append(int(firsts[j]))
             self.slot_req[slot] = req
             self.slot_pos[slot] = ln
             self.stats.prefills += 1
+            self._prefilling.discard(slot)
+        prog.finalized = True
+
+    def _advance_prefill(self, prog: _PrefillProgress) -> bool:
+        """One bounded chunk of the in-flight admission: harvest/submit a
+        conv chunk if one completed, replay one LM token quantum.  Clears
+        ``self._progress`` once replay AND conv chain are done."""
+        worked = self._advance_conv(prog.conv)
+        if prog.tok_i < prog.span:
+            i1 = min(prog.span, prog.tok_i + self._replay_quantum(
+                len(prog.wave)))
+            self._replay_span(prog, prog.tok_i, i1)
+            prog.tok_i = i1
+            self.stats.prefill_chunks += 1
+            worked = True
+            if prog.tok_i >= prog.span:
+                self._finalize_replay(prog)
+        if prog.finalized and (prog.conv is None or prog.conv.done):
+            self._progress = None
+        return worked
 
     # --------------------------------------------------------------- decode
+    def _build_decode_weight(self, cfg, params) -> jax.Array:
+        """The coalesced decode GEMM's weight.  When the params expose the
+        stacked per-layer FFN up-projection (``blocks.mlp.wi`` of shape
+        (n_layers, d_model, 2·d_ff) — dense/vlm families), stack it along
+        n into ``(d_model, n_layers·2·d_ff)`` so the decode GEMM computes
+        every layer's REAL wi on the live embeddings.  Families without a
+        dense FFN stack (moe experts, ssm/hybrid mamba blocks) fall back
+        to the seeded proxy ``(d_model, 4·d_model)`` weight."""
+        wi = None
+        if isinstance(params, dict):
+            blocks = params.get("blocks")
+            if isinstance(blocks, dict):
+                mlp = blocks.get("mlp")
+                if isinstance(mlp, dict):
+                    wi = mlp.get("wi")
+        if (wi is not None and getattr(wi, "ndim", 0) == 3
+                and wi.shape[0] == cfg.n_layers
+                and wi.shape[1] == cfg.d_model):
+            self._decode_ffn_cols = int(wi.shape[2])
+            return jnp.transpose(wi, (1, 0, 2)).reshape(
+                cfg.d_model,
+                cfg.n_layers * self._decode_ffn_cols).astype(jnp.float32)
+        self._decode_ffn_cols = None
+        return (jax.random.normal(
+            jax.random.key(0xD0), (cfg.d_model, 4 * cfg.d_model))
+            * 0.05).astype(jnp.float32)
+
     def _slot_positions(self) -> jnp.ndarray:
         """(slots,) int32 of per-slot cache positions; -1 for empty slots."""
         return jnp.array(
@@ -581,7 +778,7 @@ class SynergyServer:
     def _live_embeddings(self, toks: jnp.ndarray,
                          live: tuple[int, ...]) -> Optional[jax.Array]:
         """The step's LIVE-slot token embeddings — the activation panel of
-        the decode proxy GEMMs.  Empty slots are excluded: their padding
+        the decode GEMMs.  Empty slots are excluded: their padding
         token-0 embeddings are not traffic, and a large embed[0] row would
         inflate the max|a| EMA and waste int8 resolution on an artifact."""
         embed = (self.params.get("embed")
@@ -600,7 +797,10 @@ class SynergyServer:
             fut = self.runtime.submit(js, affinity=hint)
             self._push_inflight(_Inflight("decode", [fut]))
             return
-        d, n4, nl = self.cfg.d_model, 4 * self.cfg.d_model, self.cfg.n_layers
+        d, nl = self.cfg.d_model, self.cfg.n_layers
+        w = self._decode_w
+        n_cols = int(w.shape[1])
+        wide = self._decode_ffn_cols is not None
         cal = self._calibration_engine()
         if cal is None and hasattr(hint_eng, "observe_amax"):
             cal = hint_eng
@@ -608,26 +808,30 @@ class SynergyServer:
         # skipped entirely when nothing will consume it (fp32-only pool)
         amax = jnp.max(jnp.abs(acts)) if cal is not None else None
         if self.decode_mode == "batched":
-            # ONE coalesced submission: every live slot's per-layer GEMM
-            # stacked along m — the row-panel split amortizes dispatch
+            # ONE coalesced submission: real-FFN mode stacks every
+            # layer's wi along n (rows = live slots); the proxy stacks
+            # the per-layer GEMM along m — either way, one row-panel
+            # split amortizes dispatch
+            a = acts if wide else jnp.tile(acts, (nl, 1))
             futs = [self.runtime.submit_gemm(
-                jnp.tile(acts, (nl, 1)), self._decode_w, jobset=js,
-                tile=(_SERVE_TILE,) * 3, job_class="decode",
-                affinity=hint, observe_acts=False)]
+                a, w, jobset=js, tile=(_SERVE_TILE,) * 3,
+                job_class="decode", affinity=hint, observe_acts=False)]
         else:
             # the sequential per-slot baseline (one submission per slot)
             futs = []
             for j, slot in enumerate(job.slots):
+                m_j = 1 if wide else nl
                 js_j = JobSet.for_gemm(
-                    job.step, nl, n4, d, _SERVE_TILE,
+                    job.step, m_j, n_cols, d, _SERVE_TILE,
                     name=f"decode/s{job.step}/slot{slot}")
+                a_j = (acts[j:j + 1] if wide
+                       else jnp.tile(acts[j:j + 1], (nl, 1)))
                 futs.append(self.runtime.submit_gemm(
-                    jnp.tile(acts[j:j + 1], (nl, 1)), self._decode_w,
-                    jobset=js_j, tile=(_SERVE_TILE,) * 3,
+                    a_j, w, jobset=js_j, tile=(_SERVE_TILE,) * 3,
                     job_class="decode", affinity=hint, observe_acts=False))
         self._push_inflight(_Inflight(
-            "decode", futs, cal_engine=cal, amax=amax, cal_key=(d, n4),
-            layout=(len(job.slots), nl)))
+            "decode", futs, cal_engine=cal, amax=amax, cal_key=(d, n_cols),
+            layout=(len(job.slots), nl), wide=wide))
 
     def _do_decode(self) -> None:
         live = tuple(i for i, r in enumerate(self.slot_req) if r is not None)
@@ -639,7 +843,7 @@ class SynergyServer:
                 toks_np[i, 0] = r.out[-1]
         toks = jnp.asarray(toks_np)
         job = DecodeJob(self.stats.decode_steps, live, self.cfg.d_model,
-                        self.cfg.n_layers)
+                        self.cfg.n_layers, self._decode_ffn_cols)
         acts = self._live_embeddings(toks, live)
         if self.runtime is not None:
             self._submit_decode(job, acts)
@@ -647,7 +851,7 @@ class SynergyServer:
             eng = self._account_dispatch("decode", job.jobset())
             if acts is not None and hasattr(eng, "observe_activations"):
                 eng.observe_activations(acts, self.cfg.d_model,
-                                        4 * self.cfg.d_model)
+                                        int(self._decode_w.shape[1]))
         # per-slot positions: each live slot reads/writes at ITS OWN index
         # (a shared max(pos) would smear late-arriving requests' tokens
         # into earlier requests' cache rows); empty slots are masked (-1)

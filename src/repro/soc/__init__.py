@@ -14,14 +14,17 @@ so simulated and live steal decisions agree for identical cost models.
     print(rt.stats()["total_steals"])
 """
 
-from .policy import (STEAL_QUEUE_DEPTH, STEAL_RATE_FLOOR, pick_victim,
-                     should_steal)
+from .graph import GraphCancelled, GraphFuture, GraphNode
+from .policy import (STEAL_QUEUE_DEPTH, STEAL_RATE_FLOOR, lpt_pick,
+                     pick_victim, should_steal)
 from .runtime import (RuntimeFuture, SynergyRuntime, current_runtime,
                       runtime_scope)
-from .simrt import SimRuntime, SimRuntimeResult
+from .simrt import SimGraphResult, SimRuntime, SimRuntimeResult
 
 __all__ = [
     "SynergyRuntime", "RuntimeFuture", "runtime_scope", "current_runtime",
-    "SimRuntime", "SimRuntimeResult",
-    "should_steal", "pick_victim", "STEAL_RATE_FLOOR", "STEAL_QUEUE_DEPTH",
+    "SimRuntime", "SimRuntimeResult", "SimGraphResult",
+    "GraphNode", "GraphFuture", "GraphCancelled",
+    "should_steal", "pick_victim", "lpt_pick",
+    "STEAL_RATE_FLOOR", "STEAL_QUEUE_DEPTH",
 ]

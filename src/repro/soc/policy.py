@@ -14,7 +14,7 @@ from __future__ import annotations
 from typing import Sequence
 
 __all__ = ["STEAL_RATE_FLOOR", "STEAL_QUEUE_DEPTH", "should_steal",
-           "pick_victim"]
+           "pick_victim", "lpt_pick"]
 
 #: a thief at >= this rate (relative to the fastest pool member) may steal
 #: unconditionally; slower thieves only steal from deep queues.
@@ -39,3 +39,13 @@ def pick_victim(queue_lens: Sequence[int]) -> int:
     """Index of the busiest victim queue (ties -> lowest index, matching
     the simulator's ``max(range(n), key=len)`` from day one)."""
     return max(range(len(queue_lens)), key=lambda i: queue_lens[i])
+
+
+def lpt_pick(eligible: Sequence[int], loads: Sequence[float],
+             costs: Sequence[float]) -> int:
+    """LPT-style seed (§3.1.1): among ``eligible`` queue indices, the one
+    with the smallest projected finish time ``loads[i] + costs[i]`` (ties ->
+    lowest index).  The live runtime seeds submissions with this, and graph
+    nodes becoming ready mid-run re-enter the SAME decision, so a DAG
+    successor is placed exactly as a fresh submission would be."""
+    return min(eligible, key=lambda i: loads[i] + costs[i])

@@ -47,7 +47,7 @@ from repro.engines.dispatch import JOB_CLASSES
 from repro.engines.registry import (add_registry_listener, get_engine,
                                     remove_registry_listener)
 
-from .policy import pick_victim, should_steal
+from .policy import lpt_pick, pick_victim, should_steal
 
 __all__ = ["SynergyRuntime", "RuntimeFuture", "runtime_scope",
            "current_runtime"]
@@ -84,6 +84,8 @@ class RuntimeFuture:
         self._event = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: list[Callable[["RuntimeFuture"], None]] = []
         #: engine name -> {"jobs", "est_s", "bytes", "steals"} for the share
         #: of this submission each engine actually executed.
         self.accounting: dict[str, dict] = {}
@@ -99,10 +101,26 @@ class RuntimeFuture:
             raise self._error
         return self._value
 
+    def add_done_callback(
+            self, cb: Callable[["RuntimeFuture"], None]) -> None:
+        """Run ``cb(self)`` when the submission completes (immediately if
+        it already has).  This is how a dataflow graph adopts a
+        submission as one of its nodes: the tail panel's completion
+        decrements successor dependency counters without polling."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
     # internal ------------------------------------------------------------
     def _finish(self, value: Any, error: Optional[BaseException]) -> None:
         self._value, self._error = value, error
-        self._event.set()
+        with self._cb_lock:
+            self._event.set()
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
 
 
 class _RuntimeJob:
@@ -260,6 +278,14 @@ class SynergyRuntime:
         self._submissions = 0
         self._inflight = 0     # incomplete submissions (gates idle booking)
         self._listener = None
+        #: active dataflow-graph runs (see repro.soc.graph) — cancelled on
+        #: shutdown so an abandoned DAG can never hang a reaper on workers
+        #: that no longer exist
+        self._graphs: set = set()
+        #: lazy host-side executor for graph CPU nodes (im2col gathers,
+        #: pooling) — NEVER an engine worker, so a host stage cannot stall
+        #: an accelerator queue
+        self._host_pool = None
         if engines is None:
             from repro.engines.dispatch import DEFAULT_DISPATCHER
             pool: list[Engine] = DEFAULT_DISPATCHER.candidates(require)
@@ -301,6 +327,11 @@ class SynergyRuntime:
         with self._cond:
             if not self._started:
                 return
+            # graphs whose pending nodes would seed work AFTER the workers
+            # exit can never complete — cancel them first (reap graphs
+            # before shutting down to avoid this)
+            for g in list(self._graphs):
+                g.cancel("runtime shut down")
             if not drain:
                 self._cancel_queued_locked("runtime shut down")
             self._stopping = True
@@ -312,6 +343,9 @@ class SynergyRuntime:
         with self._cond:
             self._started = False
             self._retired.clear()
+            pool, self._host_pool = self._host_pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def _cancel_queued_locked(self, why: str) -> None:
         for w in self._workers.values():
@@ -453,9 +487,9 @@ class SynergyRuntime:
             if ai is None:
                 # LPT-style seed (§3.1.1): smallest projected finish time
                 # among eligible workers; stealing fixes the rest
-                ai = min(idxs, key=lambda i: loads[i]
-                         + workers[i].job_time(job.job_macs, job.job_bytes)
-                         * job.n_jobs)
+                costs = [workers[i].job_time(job.job_macs, job.job_bytes)
+                         * job.n_jobs for i in range(len(workers))]
+                ai = lpt_pick(idxs, loads, costs)
             loads[ai] += (workers[ai].job_time(job.job_macs, job.job_bytes)
                           * job.n_jobs)
             workers[ai].queue.append(job)
@@ -681,6 +715,56 @@ class SynergyRuntime:
                 self._seed_locked(jobs, affinity)
                 self._cond.notify_all()
         return futs
+
+    def submit_graph(self, nodes, edges, *, affinity: Optional[str] = None,
+                     granularity: str = "job", name: str = "graph"):
+        """Submit a dependency GRAPH of nodes: each node is a
+        :class:`~repro.core.job.JobSet` (accounting-only) or a
+        :class:`repro.soc.graph.GraphNode` (host compute / nested
+        ``submit_gemm``); ``edges`` is an iterable of ``(pred, succ)``
+        index pairs.  A node's work enters the pool the moment its last
+        predecessor's tail panel lands: the completion callback decrements
+        the successor's dependency counter under the manager lock and
+        LPT-seeds the newly ready units into the existing worker deques,
+        so stealing, hotplug rebalances and ``submit_timeout`` apply to
+        graph work unchanged.  Returns a
+        :class:`repro.soc.graph.GraphFuture` (per-node values, merged
+        accounting, ``cancel()``)."""
+        from .graph import _GraphRun
+        run = _GraphRun(self, nodes, edges, affinity=affinity,
+                        granularity=granularity, name=name)
+        run.start()
+        return run.future
+
+    def _host_submit(self, fn, *args) -> None:
+        """Run ``fn(*args)`` on the runtime's host-side executor (graph
+        CPU nodes).  Lazy: serving without graphs never spawns it."""
+        import concurrent.futures
+        with self._lock:
+            if self._host_pool is None:
+                self._host_pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=2,
+                    thread_name_prefix=f"synergy-{self.name}-host")
+            pool = self._host_pool
+        pool.submit(fn, *args)
+
+    def _drain_jobs_locked(self, predicate, error: BaseException) -> int:
+        """Remove queued (unstarted) jobs matching ``predicate`` from every
+        worker deque, completing each with ``error``; in-flight jobs are
+        untouched.  The cancellation half of ``GraphFuture.cancel``:
+        a failed upstream node must not leave orphan panels running."""
+        n = 0
+        for w in self._workers.values():
+            drained = [j for j in w.queue if predicate(j)]
+            if not drained:
+                continue
+            kept = [j for j in w.queue if not predicate(j)]
+            w.queue.clear()
+            w.queue.extend(kept)
+            for job in drained:
+                job.sub.complete(job, w.engine.name, None, error, 0.0, False)
+            n += len(drained)
+        return n
 
     def submit_gemm(self, a, b, *, jobset, bias=None, activation=None,
                     tile=(256, 256, 256), out_dtype=None, precision=None,

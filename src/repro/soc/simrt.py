@@ -25,7 +25,7 @@ from repro.engines.registry import get_engine
 
 from .policy import pick_victim, should_steal
 
-__all__ = ["SimRuntime", "SimRuntimeResult"]
+__all__ = ["SimRuntime", "SimRuntimeResult", "SimGraphResult"]
 
 
 @dataclasses.dataclass
@@ -46,6 +46,14 @@ class SimRuntimeResult:
             return 0.0
         n = len(self.per_engine_busy)
         return sum(self.per_engine_busy.values()) / (n * self.makespan_s)
+
+
+@dataclasses.dataclass
+class SimGraphResult(SimRuntimeResult):
+    """One graph run in virtual time: per-node completion stamps on top of
+    the usual per-engine accounting."""
+
+    node_finish_s: tuple[float, ...] = ()
 
 
 class SimRuntime:
@@ -133,3 +141,115 @@ class SimRuntime:
             per_engine_jobs=dict(zip(names, jobs_run)),
             per_engine_busy=dict(zip(names, busy)),
             per_engine_steals=dict(zip(names, steals)))
+
+    def run_graph(self, jobsets, edges, *, affinity: Optional[str] = None,
+                  granularity: str = "job") -> SimGraphResult:
+        """Execute a DAG of accounting JobSets in virtual time — the
+        conformance twin of :meth:`SynergyRuntime.submit_graph`.
+
+        A node's units enter the home queue at the virtual instant its
+        last predecessor's tail unit completes; every free engine is then
+        kicked in pool order (exactly the state a fresh seed would see,
+        since the finishing engine is free and all others drained
+        earlier), so for a chain graph the trace is unit-for-unit
+        identical to running the jobsets back-to-back through
+        :meth:`run` — which is itself DES-conformant."""
+        from .graph import validate_dag
+        n = len(jobsets)
+        succs, preds = validate_dag(n, edges)
+        remaining = [len(p) for p in preds]
+
+        def node_units(js) -> list:
+            j = next(js.jobs()) if js.num_jobs else None
+            if j is None:
+                return []
+            if granularity == "job":
+                return [(1, j.macs, j.bytes_moved)] * js.num_jobs
+            gm, gn = js.grid
+            return [(gn, j.macs, j.bytes_moved)] * gm
+
+        units = [node_units(js) for js in jobsets]
+        pending = [len(u) for u in units]
+        node_finish = [0.0] * n
+
+        names = [e.name for e in self.engines]
+        queues: list[list] = [[] for _ in self.engines]
+        home = names.index(affinity) if affinity in names else 0
+
+        rates = [e.cost.macs_per_s for e in self.engines]
+        fastest = max(rates)
+        busy = [0.0] * len(self.engines)
+        jobs_run = [0] * len(self.engines)
+        steals = [0] * len(self.engines)
+        free = [True] * len(self.engines)
+
+        events: list = []
+        seq = itertools.count()
+        now = 0.0
+
+        def release(ready: list[int]) -> None:
+            """Enqueue newly ready nodes at virtual time ``now``; empty
+            nodes complete instantly and cascade."""
+            while ready:
+                nid = ready.pop(0)
+                if pending[nid] == 0:        # no units: done on release
+                    node_finish[nid] = now
+                    for s in succs[nid]:
+                        remaining[s] -= 1
+                        if remaining[s] == 0:
+                            ready.append(s)
+                    continue
+                queues[home].extend((nid,) + u for u in units[nid])
+
+        def try_dispatch(i: int) -> None:
+            if not free[i]:
+                return
+            unit = None
+            stolen = False
+            if queues[i]:
+                unit = queues[i].pop(0)
+            else:
+                lens = [len(q) for q in queues]
+                if any(lens):
+                    v = pick_victim(lens)
+                    if v != i and should_steal(rates[i] / fastest, lens[v]):
+                        unit = queues[v].pop()     # steal from the tail
+                        stolen = True
+            if unit is None:
+                return
+            _, n_jobs, macs, nbytes = unit
+            dt = n_jobs * self.engines[i].cost.job_time(macs, nbytes)
+            free[i] = False
+            busy[i] += dt
+            jobs_run[i] += n_jobs
+            steals[i] += int(stolen)
+            heapq.heappush(events, (now + dt, next(seq), i, unit[0]))
+
+        def kick_all() -> None:
+            for i in range(len(self.engines)):
+                try_dispatch(i)
+
+        release([i for i in range(n) if remaining[i] == 0])
+        kick_all()
+        while events:
+            now, _, i, nid = heapq.heappop(events)
+            free[i] = True
+            pending[nid] -= 1
+            if pending[nid] == 0:
+                node_finish[nid] = now
+                ready = []
+                for s in succs[nid]:
+                    remaining[s] -= 1
+                    if remaining[s] == 0:
+                        ready.append(s)
+                release(ready)
+                kick_all()
+            else:
+                try_dispatch(i)
+
+        return SimGraphResult(
+            makespan_s=now,
+            per_engine_jobs=dict(zip(names, jobs_run)),
+            per_engine_busy=dict(zip(names, busy)),
+            per_engine_steals=dict(zip(names, steals)),
+            node_finish_s=tuple(node_finish))

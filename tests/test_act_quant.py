@@ -234,7 +234,8 @@ def test_server_decode_feeds_calibrator():
                   n_heads=2, d_ff=64, vocab=128)
     params = init_model(cfg, jax.random.key(0))
     q = QuantizedEngine(get_engine("xla"), name="feed-int8")
-    key = (cfg.d_model, 4 * cfg.d_model)
+    # real n-stacked FFN decode GEMM: key is (d_model, n_layers·2·d_ff)
+    key = (cfg.d_model, cfg.n_layers * 2 * cfg.d_ff)
     with registered(q):
         srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4)
         for i in range(2):

@@ -1,0 +1,137 @@
+"""Hypothesis property tests for dataflow-graph submissions (ISSUE 6
+satellite 3).
+
+For RANDOM dag topologies, node-kind mixes (real GEMM run nodes vs
+accounting JobSet nodes), steal-timing seeds, and mixed fp32/int8 pools:
+
+  * every node executes exactly once (run bodies counted, accounting
+    jobs summed against ``num_jobs``);
+  * the completion order respects every dependency edge (predecessors
+    reap strictly before successors);
+  * each GEMM node's value is bitwise equal to submitting the same GEMMs
+    one-at-a-time in topological order (the single-submit reference) —
+    graph overlap must never change numerics.
+
+The seeded deterministic sweep in ``test_graph_runtime.py`` covers the
+same invariants when the hypothesis dev-dependency is absent.
+"""
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev deps
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.job import JobSet                         # noqa: E402
+from repro.engines import (CAP_GEMM, CostModel, Engine,   # noqa: E402
+                           get_engine)
+from repro.quant import QuantizedEngine                   # noqa: E402
+from repro.soc import GraphNode, SynergyRuntime           # noqa: E402
+from repro.soc.graph import validate_dag                  # noqa: E402
+
+
+class _DelayEngine(Engine):
+    """Deterministic-output engine with seeded random per-job delays."""
+
+    def __init__(self, name, macs_per_s=1e9, seed=0, max_delay_s=0.002):
+        super().__init__(name, {CAP_GEMM, "epilogue"},
+                         cost=CostModel(macs_per_s=macs_per_s))
+        self._rng = random.Random(seed)
+        self._max_delay_s = max_delay_s
+
+    def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                out_dtype=None, precision=None):
+        time.sleep(self._rng.random() * self._max_delay_s)
+        y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        if bias is not None:
+            y = y + bias
+        if activation is not None:
+            y = activation(y)
+        return y.astype(out_dtype or a.dtype)
+
+
+@settings(max_examples=12, deadline=None)
+@given(topo_seed=st.integers(0, 2**16), steal_seed=st.integers(0, 2**16),
+       with_int8=st.booleans())
+def test_random_dag_exactly_once_ordered_bitwise(topo_seed, steal_seed,
+                                                 with_int8):
+    rng = random.Random(topo_seed)
+    n = rng.randint(2, 6)
+    edges = [(u, v) for u in range(n) for v in range(u + 1, n)
+             if rng.random() < 0.5]
+    kinds = [rng.choice(["gemm", "acct"]) for _ in range(n)]
+    _, preds = validate_dag(n, edges)
+
+    d = 32
+    base = [jax.random.normal(jax.random.key(1000 + i), (48, d))
+            for i in range(n)]
+    w = jax.random.normal(jax.random.key(5), (d, d))
+    ran: list[int] = []
+
+    def make_node(i):
+        if kinds[i] == "acct":
+            return GraphNode(name=f"acct{i}",
+                             jobset=JobSet.for_gemm(i, 96, 64, 32, 32,
+                                                    name=f"acct{i}"))
+
+        def run(rt, *pvals, _i=i):
+            ran.append(_i)
+            x = base[_i]
+            for pv in pvals:
+                if pv is not None:   # accounting predecessors: no value
+                    x = x + pv
+            return rt.submit_gemm(x, w, jobset=JobSet.for_gemm(
+                _i, 48, d, d, 16, name=f"gemm{_i}"), tile=(16, 16, 16))
+        return GraphNode(name=f"gemm{i}", run=run)
+
+    pool = [_DelayEngine("dly-a", seed=steal_seed),
+            _DelayEngine("dly-b", seed=steal_seed + 1)]
+    if with_int8:
+        pool.append(QuantizedEngine(get_engine("xla"),
+                                    name=f"int8-{topo_seed % 97}"))
+    with SynergyRuntime(pool, name="prop") as rt:
+        gf = rt.submit_graph([make_node(i) for i in range(n)], edges,
+                             name="prop")
+        vals = gf.result(120)
+        # single-submit reference on the SAME runtime, topological order,
+        # identical pred-value accumulation order (edge order)
+        ref: list = [None] * n
+        for i in range(n):
+            if kinds[i] == "acct":
+                continue
+            x = base[i]
+            for p in preds[i]:
+                if ref[p] is not None:
+                    x = x + ref[p]
+            ref[i] = rt.submit_gemm(x, w, jobset=JobSet.for_gemm(
+                i, 48, d, d, 16, name=f"ref{i}"),
+                tile=(16, 16, 16)).result(120)
+
+    # exactly once
+    assert sorted(ran) == [i for i in range(n) if kinds[i] == "gemm"]
+    acct_jobs = sum(a["jobs"] for a in gf.accounting.values())
+    # every node reaped, predecessors strictly first
+    assert sorted(gf.finish_order) == list(range(n))
+    pos = {nid: i for i, nid in enumerate(gf.finish_order)}
+    for u, v in edges:
+        assert pos[u] < pos[v]
+    assert gf.node_states() == ["done"] * n
+    # bitwise vs the single-submit reference
+    for i in range(n):
+        if kinds[i] == "gemm":
+            assert np.array_equal(np.asarray(vals[i]),
+                                  np.asarray(ref[i])), i
+        else:
+            assert vals[i] is None
+    # accounting: graph booked at least the accounting nodes' jobs plus
+    # one panel per GEMM node
+    min_jobs = (sum(JobSet.for_gemm(i, 96, 64, 32, 32).num_jobs
+                    for i in range(n) if kinds[i] == "acct")
+                + sum(1 for i in range(n) if kinds[i] == "gemm"))
+    assert acct_jobs >= min_jobs

@@ -292,13 +292,16 @@ def test_accounting_jobs_still_steal_across_mixed_pool():
     with SynergyRuntime([fp32, int8], name="acct") as rt:
         assert rt._mixed_precision_pool()
         seen = {}
-        orig = rt._submit_jobs
+        orig = rt._seed_locked
 
-        def spy(jobset, units, merge, affinity, stealable=True, **kw):
-            seen[jobset.name] = stealable
-            return orig(jobset, units, merge, affinity, stealable, **kw)
+        # every submission path (submit/submit_many/submit_gemm/graphs)
+        # funnels through _seed_locked: record the per-job stealable flag
+        def spy(jobs, affinity):
+            for j in jobs:
+                seen.setdefault(j.sub.future.jobset.name, j.stealable)
+            return orig(jobs, affinity)
 
-        rt._submit_jobs = spy
+        rt._seed_locked = spy
         fut = rt.submit(js, affinity=fp32.name)
         fut.result(30)
         assert sum(x["jobs"] for x in fut.accounting.values()) == js.num_jobs

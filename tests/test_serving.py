@@ -359,9 +359,10 @@ def test_batched_decode_bitwise_identical_int8_calibrated():
     qb = mk_engine("per-slot")
     rb, sb, outs_b = _run_decode_mode("per-slot", [qb])
     assert [r.out for r in ra] == [r.out for r in rb]
-    # the calibrator saw one observation per decode step in BOTH modes
+    # the calibrator saw one observation per decode step in BOTH modes;
+    # the key is the real n-stacked FFN GEMM shape (d, n_layers·2·d_ff)
     cfg = _cfg()
-    key = (cfg.d_model, 4 * cfg.d_model)
+    key = (cfg.d_model, cfg.n_layers * 2 * cfg.d_ff)
     assert qa.calibrator.state()[key].updates == sa.decode_steps
     assert qb.calibrator.state()[key].updates == sb.decode_steps
     assert qa.calibrator.state()[key].amax \
@@ -425,6 +426,139 @@ def test_submit_timeout_surfaces_serve_timeout_error():
             srv.run()
     assert "prefill/w1" in str(ei.value)
     assert ei.value.timeout == 0.01
+
+
+def test_timeout_cancels_graph_and_drains_queues():
+    """Satellite 1: tripping submit_timeout on a prefill graph CANCELS
+    it — not-yet-started downstream nodes never launch, queued panels are
+    drained — and the pool immediately serves fresh work instead of
+    grinding through the dead wave's backlog."""
+    from repro.core.job import JobSet
+    from repro.soc import GraphCancelled, SynergyRuntime
+    eng = _SleepyEngine(delay_s=0.2)
+    with SynergyRuntime([eng], name="slowpool2") as rt:
+        srv = _server(slots=1, runtime=rt, prefill_cnn=TINY_CNN,
+                      submit_timeout=0.01)
+        captured = {}
+        orig = rt.submit_graph
+
+        def capture(*a, **kw):
+            gf = orig(*a, **kw)
+            captured["gf"] = gf
+            return gf
+
+        rt.submit_graph = capture
+        srv.submit(Request(0, jnp.arange(4, dtype=jnp.int32),
+                           max_new_tokens=2))
+        with pytest.raises(ServeTimeoutError):
+            srv.run()
+        gf = captured["gf"]
+        with pytest.raises((GraphCancelled, RuntimeError)):
+            gf.result(10)
+        states = gf.node_states()
+        assert "cancelled" in states       # downstream never started
+        assert "done" not in states[-1:] or states[-1] == "cancelled"
+        # queues drained: fresh work completes in ~one panel delay, far
+        # less than the cancelled wave's remaining serial backlog
+        a = jnp.ones((16, 32), jnp.float32)
+        b = jnp.ones((32, 16), jnp.float32)
+        t0 = time.monotonic()
+        rt.submit_gemm(a, b, jobset=JobSet.for_gemm(9, 16, 16, 32, 16,
+                                                    name="fresh"),
+                       tile=(16, 16, 16)).result(30)
+        assert time.monotonic() - t0 < 1.0
+
+
+# ------------------------------------------------------- chunked prefill
+
+def test_chunked_prefill_interleaves_decode_and_matches_blocking():
+    """Tentpole: with ``prefill_chunk_macs`` set, admission work is split
+    into bounded chunks interleaved with decode — live decoders never
+    stall behind a wave (decode_stall_steps == 0) — and every request's
+    token stream is IDENTICAL to the legacy blocking admission (replay
+    quanta touch only the wave's slots, decode only live slots)."""
+    def run(**kw):
+        srv = _server(slots=2, **kw)
+        reqs = [Request(i, jnp.arange(4, dtype=jnp.int32) + i,
+                        max_new_tokens=3 + i) for i in range(4)]
+        for r in reqs:
+            srv.submit(r)
+        stats = srv.run()
+        return [list(r.out) for r in reqs], stats
+
+    outs_blk, st_blk = run()
+    outs_chk, st_chk = run(prefill_chunk_macs=20_000)
+    assert outs_chk == outs_blk                     # bitwise token parity
+    assert st_chk.prefill_chunks > 0
+    assert st_chk.decode_stall_steps == 0           # decode ran every step
+    assert st_blk.prefill_chunks == 0               # legacy mode untouched
+    # staggered completions force an admission while a decoder is live:
+    # the blocking server stalls it, the chunked one never does
+    assert st_blk.decode_stall_steps > 0
+    assert st_chk.prefills == st_blk.prefills == 4
+
+
+def test_chunked_conv_graph_chunks_through_runtime():
+    """The wave's conv front-end splits into multiple bounded-MAC graph
+    chunks chained by their carry, still producing the same tokens as one
+    unchunked graph, with all conv jobs booked."""
+    from repro.soc import SynergyRuntime
+
+    def run(chunk):
+        with SynergyRuntime(["F-PE", "S-PE"], name=f"chunk{chunk}") as rt:
+            srv = _server(slots=2, runtime=rt, prefill_cnn=TINY_CNN,
+                          prefill_chunk_macs=chunk)
+            reqs = [Request(i, jnp.arange(4, dtype=jnp.int32) + i,
+                            max_new_tokens=3 + i) for i in range(4)]
+            for r in reqs:
+                srv.submit(r)
+            stats = srv.run()
+        return [list(r.out) for r in reqs], stats
+
+    outs_one, st_one = run(None)
+    # ~147k MACs per TINY_CNN conv layer at 8 frames: one layer per chunk
+    outs_many, st_many = run(150_000)
+    assert outs_many == outs_one
+    assert st_many.prefill_chunks >= 4     # >= 2 conv chunks x 2 waves
+    assert st_many.decode_stall_steps == 0
+    assert st_many.prefills == st_one.prefills == 4
+    # chunking never drops conv work (busy-SECONDS are steal-placement
+    # dependent across F-PE/S-PE, so compare booked work, not seconds)
+    assert st_many.runtime_jobs > 0
+    assert st_many.job_busy_s["prefill"] > 0
+
+
+# ------------------------------------------------- real FFN decode weights
+
+def test_decode_weight_stacks_real_ffn_layers():
+    """Satellite 2: dense-family params expose blocks.mlp.wi of shape
+    (n_layers, d_model, 2·d_ff) — the decode GEMM weight is the REAL
+    per-layer wi stacked along n, not the seeded proxy."""
+    cfg = _cfg()
+    params = init_model(cfg, jax.random.key(0))
+    srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4)
+    assert srv._decode_ffn_cols == 2 * cfg.d_ff
+    assert srv._decode_w.shape == (cfg.d_model,
+                                   cfg.n_layers * 2 * cfg.d_ff)
+    wi = params["blocks"]["mlp"]["wi"]
+    ref = jnp.transpose(wi, (1, 0, 2)).reshape(cfg.d_model, -1)
+    assert np.array_equal(np.asarray(srv._decode_w),
+                          np.asarray(ref.astype(jnp.float32)))
+
+
+def test_decode_weight_proxy_fallback_for_ssm():
+    """Families without a dense FFN stack (mamba blocks) fall back to the
+    (d_model, 4·d_model) proxy — and still serve end to end."""
+    cfg = reduced(ARCHS["mamba2-130m"])
+    params = init_model(cfg, jax.random.key(0))
+    srv = SynergyServer(cfg, params, slots=1, max_len=16, prefill_len=2)
+    assert srv._decode_ffn_cols is None
+    assert srv._decode_w.shape == (cfg.d_model, 4 * cfg.d_model)
+    req = Request(0, jnp.arange(2, dtype=jnp.int32) % cfg.vocab_size,
+                  max_new_tokens=2)
+    srv.submit(req)
+    stats = srv.run()
+    assert stats.decode_steps >= 1 and len(req.out) >= 2
 
 
 def test_empty_prompt_mid_wave_drops_nothing():
