@@ -30,7 +30,8 @@ _ROW_KEYS = ("net", "pool", "mode", "design", "leg", "shape")
 #: ``tokens_per_s_wall`` fields, which stay ungated wall-clock telemetry.
 _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
                "fpga_fps", "het_fps", "tokens_per_s_rel",
-               "prefill_overlap_rel", "decode_p99_rel")
+               "prefill_overlap_rel", "decode_p99_rel",
+               "slo_attainment_rel", "recovery_fps_rel")
 
 
 def load_run(path: str) -> dict:

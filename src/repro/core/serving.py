@@ -60,19 +60,23 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional
+import math
+import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.engines import CAP_INT8, Dispatcher, Engine, find_engine
+from repro.soc.qos import AdmissionRejected, Tenant
+from repro.soc.qos_policy import PREFILL_PRIORITY_OFFSET, FairShare, QosTag
 
 from .im2col import conv_out_shape, im2col_wave
 from .job import JobSet, chunk_by_macs
 
 __all__ = ["Request", "PrefillJob", "DecodeJob", "ServeStats",
-           "ServeTimeoutError", "SynergyServer"]
+           "TenantStats", "ServeTimeoutError", "SynergyServer"]
 
 #: tile for the serving-side job accounting (decode GEMMs are tiny; the
 #: paper-faithful TS=32 keeps their jobsets non-degenerate)
@@ -82,18 +86,28 @@ _SERVE_TILE = 32
 class ServeTimeoutError(RuntimeError):
     """A runtime submission missed the server's ``submit_timeout``.
 
-    Carries the jobset name and the per-engine accounting booked so far,
-    so the operator sees WHICH submission stalled and how much of it each
-    engine had already executed — not a bare futures error."""
+    Carries the jobset name, the per-engine accounting booked so far, and
+    the affected request/tenant identity (``rids``/``tenants``) — so the
+    operator sees WHICH submission stalled, how much of it each engine
+    had already executed, and WHOSE traffic it was — not a bare futures
+    error."""
 
-    def __init__(self, jobset_name: str, timeout: float, accounting: dict):
+    def __init__(self, jobset_name: str, timeout: float, accounting: dict,
+                 rids: Sequence[int] = (), tenants: Sequence[str] = ()):
         self.jobset_name = jobset_name
         self.timeout = timeout
         self.accounting = dict(accounting)
+        self.rids = tuple(rids)
+        self.tenants = tuple(t for t in tenants if t)
         done = {name: a.get("jobs", 0) for name, a in self.accounting.items()}
+        who = ""
+        if self.rids:
+            who = f" [rids={list(self.rids)}"
+            who += (f" tenants={sorted(set(self.tenants))}]"
+                    if self.tenants else "]")
         super().__init__(
             f"serving submission {jobset_name!r} not done in {timeout}s "
-            f"(per-engine jobs completed so far: {done or 'none'})")
+            f"(per-engine jobs completed so far: {done or 'none'}){who}")
 
 
 @dataclasses.dataclass
@@ -102,6 +116,17 @@ class Request:
     tokens: jax.Array          # (prompt_len,) int32
     max_new_tokens: int
     out: list = dataclasses.field(default_factory=list)
+    #: tenant name (required on a tenanted server; ignored otherwise)
+    tenant: Optional[str] = None
+    #: per-request SLO deadline in seconds from submission (overrides the
+    #: tenant class default; None = the class default / no deadline)
+    deadline_s: Optional[float] = None
+    #: stamped by the server: monotonic submit instant, resolved absolute
+    #: deadline, and the instant the last token was emitted — always
+    #: recorded (QoS or not) so attainment is computable on ANY server
+    submitted_at: float = 0.0
+    deadline_at: float = math.inf
+    done_at: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +185,29 @@ class DecodeJob:
 
 
 @dataclasses.dataclass
+class TenantStats:
+    """Per-tenant serving counters (``ServeStats.tenants[name]``) — the
+    attribution surface for QoS failures: whose tokens, whose queue-wait,
+    whose deadlines."""
+
+    admitted: int = 0
+    rejected: int = 0
+    prefills: int = 0
+    tokens_out: int = 0
+    queue_wait_s: float = 0.0
+    max_queue_wait_s: float = 0.0
+    deadline_hits: int = 0
+    deadline_misses: int = 0
+    #: decode steps this tenant's slots ran int8-degraded (shed ladder)
+    degraded_steps: int = 0
+
+    @property
+    def deadline_attainment(self) -> float:
+        n = self.deadline_hits + self.deadline_misses
+        return self.deadline_hits / n if n else 1.0
+
+
+@dataclasses.dataclass
 class ServeStats:
     engine_steps: int = 0
     prefills: int = 0
@@ -189,6 +237,14 @@ class ServeStats:
     #: runtime mode only: tile jobs executed / stolen across the pool
     runtime_jobs: int = 0
     runtime_steals: int = 0
+    #: tenant name -> :class:`TenantStats` (tenanted servers only)
+    tenants: dict = dataclasses.field(default_factory=dict)
+    #: requests refused admission (queue bound hit after the shed ladder)
+    admission_rejects: int = 0
+    #: times the shed ladder ENGAGED (occupancy crossed the watermark)
+    shed_engagements: int = 0
+    #: decode steps that ran with at least one int8-degraded slot group
+    shed_degraded_steps: int = 0
 
     @property
     def slot_efficiency(self) -> float:
@@ -207,6 +263,12 @@ class _Inflight:
     cal_key: Optional[tuple] = None  # (k, n) batch-shape key
     layout: Optional[tuple] = None   # (live, n_layers) result stitching
     wide: bool = False               # real-FFN n-stacked decode layout
+    #: request/tenant identity for timeout attribution
+    rids: tuple = ()
+    tenant_names: tuple = ()
+    #: shed-ladder row partition: (normal_rows, degraded_rows) index lists
+    #: into the live layout when decode split into two class submissions
+    groups: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -224,6 +286,9 @@ class _ConvProgress:
     total: int = 0                  # chunks at construction (for naming)
     idx: int = 0                    # next chunk index
     fut: object = None              # outstanding GraphFuture
+    qos: Optional[QosTag] = None    # the wave's prefill-class tag
+    rids: tuple = ()                # timeout attribution
+    tenant_names: tuple = ()
 
     @property
     def done(self) -> bool:
@@ -265,7 +330,19 @@ class SynergyServer:
     them with decode — ``None`` keeps the legacy blocking admission;
     keep_decode_outputs: retain each step's reaped decode-GEMM output in
     ``decode_gemm_outputs`` (canonical (live, n_layers, n_cols) layout
-    in BOTH decode modes — how the bitwise-identity tests compare them).
+    in BOTH decode modes — how the bitwise-identity tests compare them);
+    tenants: :class:`repro.soc.qos.Tenant` list — enables multi-tenant
+    QoS: per-tenant bounded queues, weighted fair admission
+    (:class:`~repro.soc.qos_policy.FairShare`), QoS tags on every
+    runtime submission (decode at class priority, prefill one notch
+    below — see ``PREFILL_PRIORITY_OFFSET``), the load-shedding ladder,
+    and per-tenant :class:`TenantStats`; ``None`` keeps the untenanted
+    FIFO server, decision-for-decision identical to before;
+    max_pending: pending-queue bound — server-wide without tenants,
+    per-tenant default (each tenant's own ``max_pending`` overrides)
+    with them; overflow raises :class:`~repro.soc.qos.AdmissionRejected`
+    with a cost-model retry-after (``None`` = unbounded, the legacy
+    behavior).
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 64,
@@ -278,7 +355,9 @@ class SynergyServer:
                  max_inflight: int = 2,
                  submit_timeout: float = 60.0,
                  prefill_chunk_macs: Optional[int] = None,
-                 keep_decode_outputs: bool = False):
+                 keep_decode_outputs: bool = False,
+                 tenants: Optional[Sequence[Tenant]] = None,
+                 max_pending: Optional[int] = None):
         from repro.models import decode_step, init_cache
         from repro.models.cnn import init_cnn
         if admission not in ("wave", "single"):
@@ -302,7 +381,22 @@ class SynergyServer:
         self.cache = init_cache(cfg, slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_pos = [0] * slots
-        self.pending: list[Request] = []
+        self.max_pending = max_pending
+        self._qos_enabled = tenants is not None
+        if self._qos_enabled:
+            if not tenants:
+                raise ValueError("tenants=[] — pass None for an "
+                                 "untenanted server")
+            names = [t.name for t in tenants]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate tenant names: {names}")
+            self.tenants = {t.name: t for t in tenants}
+        else:
+            self.tenants = {"default": Tenant("default")}
+        self._queues: dict[str, list[Request]] = {
+            name: [] for name in self.tenants}
+        self._fair = FairShare()
+        self._shed_level = 0
         self.stats = ServeStats()
         self.dispatcher = dispatcher or Dispatcher()
         #: optional repro.soc.SynergyRuntime — prefill/decode jobsets become
@@ -328,8 +422,100 @@ class SynergyServer:
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
 
     # ------------------------------------------------------------- requests
+    @property
+    def pending(self) -> list[Request]:
+        """Untenanted servers expose the REAL pending list (mutable, the
+        legacy surface); tenanted servers return a flattened snapshot of
+        every tenant queue — mutate through submit()/admission there."""
+        if not self._qos_enabled:
+            return self._queues["default"]
+        return [r for q in self._queues.values() for r in q]
+
+    def _tstats(self, name: str) -> TenantStats:
+        return self.stats.tenants.setdefault(name, TenantStats())
+
     def submit(self, req: Request) -> None:
-        self.pending.append(req)
+        """Admit one request into its tenant's pending queue.
+
+        Stamps ``submitted_at`` and resolves the absolute ``deadline_at``
+        (request ``deadline_s`` overrides the tenant class default) on
+        EVERY server, so attainment is computable against an untenanted
+        FIFO baseline too.  Tenanted servers enforce the per-tenant bound
+        (``Tenant.max_pending`` falling back to the server's
+        ``max_pending``) and raise :class:`~repro.soc.qos.
+        AdmissionRejected` with a cost-model retry-after when it is hit —
+        AFTER the shed ladder has already engaged at the occupancy
+        watermark.  An unknown tenant raises ``KeyError``."""
+        now = time.monotonic()
+        req.submitted_at = now
+        if not self._qos_enabled:
+            dl = req.deadline_s
+            req.deadline_at = now + dl if dl is not None else math.inf
+            q = self._queues["default"]
+            if (self.max_pending is not None
+                    and len(q) >= self.max_pending):
+                self.stats.admission_rejects += 1
+                raise AdmissionRejected("default",
+                                        self._retry_after("default"))
+            q.append(req)
+            return
+        if req.tenant not in self.tenants:
+            raise KeyError(f"unknown tenant {req.tenant!r}; known: "
+                           f"{sorted(self.tenants)}")
+        t = self.tenants[req.tenant]
+        dl = (req.deadline_s if req.deadline_s is not None
+              else t.qos.deadline_s)
+        req.deadline_at = now + dl if dl is not None else math.inf
+        self._update_shed()
+        q = self._queues[t.name]
+        bound = (t.max_pending if t.max_pending is not None
+                 else self.max_pending)
+        if bound is not None and len(q) >= bound:
+            self.stats.admission_rejects += 1
+            self._tstats(t.name).rejected += 1
+            raise AdmissionRejected(t.name, self._retry_after(t.name))
+        q.append(req)
+
+    def _retry_after(self, tname: str) -> float:
+        """Cost-model estimate of when this tenant's queue frees a spot:
+        the queued requests' remaining tokens through the dispatcher's
+        decode estimate, over the slot parallelism."""
+        q = self._queues.get(tname, [])
+        js = DecodeJob(0, (0,), self.cfg.d_model, self.cfg.n_layers,
+                       self._decode_ffn_cols).jobset()
+        try:
+            eng = self.dispatcher.select(js, job_class="decode")
+            per_tok = eng.estimate(js)
+        except RuntimeError:
+            per_tok = 1e-3
+        toks = sum(r.max_new_tokens for r in q) or 1
+        return per_tok * toks / max(1, self.slots)
+
+    def _update_shed(self) -> None:
+        """The load-shedding ladder's occupancy trigger, with hysteresis:
+        ENGAGE level 1 (sheddable tenants' decode degrades to int8-only
+        via the ``decode_degraded`` job class) when bounded queues reach
+        80% of capacity; disengage below 40%.  Unbounded tenancy never
+        sheds — there is no overload signal to act on."""
+        if not self._qos_enabled:
+            return
+        cap = tot = 0
+        for name, t in self.tenants.items():
+            bound = (t.max_pending if t.max_pending is not None
+                     else self.max_pending)
+            if bound is None:
+                continue
+            cap += bound
+            tot += len(self._queues[name])
+        if cap == 0:
+            self._shed_level = 0
+            return
+        occ = tot / cap
+        if self._shed_level == 0 and occ >= 0.8:
+            self._shed_level = 1
+            self.stats.shed_engagements += 1
+        elif self._shed_level == 1 and occ < 0.4:
+            self._shed_level = 0
 
     def reset_stats(self) -> None:
         """Fresh counters (benchmark repetitions reuse a warmed server)."""
@@ -395,29 +581,84 @@ class SynergyServer:
         return self.stats
 
     # ------------------------------------------------------------ admission
+    def _pick_requests(self, n: int) -> list[tuple[str, Request]]:
+        """Weighted fair admission: up to ``n`` ``(tenant, request)``
+        pairs, chosen head-of-queue by :class:`~repro.soc.qos_policy.
+        FairShare` (priority first, then stride virtual time, deadline as
+        the tie-break).  Peeks only — the caller validates the whole wave
+        before committing the pops, preserving the legacy
+        nothing-dropped-on-error invariant (an aborted wave leaves a
+        little virtual-time drift, never a lost request)."""
+        taken = {name: 0 for name in self._queues}
+        picked: list[tuple[str, Request]] = []
+        while len(picked) < n:
+            cands = []
+            for name, q in self._queues.items():
+                i = taken[name]
+                if i < len(q):
+                    t = self.tenants[name]
+                    cands.append((name, t.qos.priority, q[i].deadline_at,
+                                  t.qos.weight))
+            if not cands:
+                break
+            name = self._fair.pick(cands)
+            picked.append((name, self._queues[name][taken[name]]))
+            taken[name] += 1
+            self._fair.charge(name, self.tenants[name].qos.weight)
+        return picked
+
     def _admit_wave(self) -> int:
         """Admit ``min(pending, free slots)`` requests in ONE wave (one
         batched LM replay + one conv-front-end batch); ``"single"``
-        admission caps the wave at 1 (the legacy baseline)."""
+        admission caps the wave at 1 (the legacy baseline).  Tenanted
+        servers pick wave members by weighted fair share instead of
+        global FIFO; untenanted admission is byte-identical to before."""
         free = [i for i, r in enumerate(self.slot_req)
                 if r is None and i not in self._prefilling]
-        n = min(len(self.pending), len(free))
+        if not self._qos_enabled:
+            q = self._queues["default"]
+            n = min(len(q), len(free))
+            if self.admission == "single":
+                n = min(n, 1)
+            if n == 0:
+                return 0
+            # validate BEFORE popping: a bad request mid-wave must not
+            # drop the wave members already taken off the pending queue
+            wave = []
+            for j, slot in enumerate(free[:n]):
+                req = q[j]
+                toks = req.tokens[: self.prefill_len]
+                if toks.shape[0] == 0:
+                    raise ValueError(f"request {req.rid}: empty prompt")
+                wave.append((req, slot, toks))
+            del q[:n]
+            self._do_prefill_wave(wave)
+            return n
+        navail = len(free)
         if self.admission == "single":
-            n = min(n, 1)
-        if n == 0:
+            navail = min(navail, 1)
+        if navail == 0:
             return 0
-        # validate BEFORE popping: a bad request mid-wave must not drop
-        # the wave members already taken off the pending queue
+        picked = self._pick_requests(navail)
+        if not picked:
+            return 0
         wave = []
-        for j, slot in enumerate(free[:n]):
-            req = self.pending[j]
+        for (tname, req), slot in zip(picked, free):
             toks = req.tokens[: self.prefill_len]
             if toks.shape[0] == 0:
                 raise ValueError(f"request {req.rid}: empty prompt")
             wave.append((req, slot, toks))
-        del self.pending[:n]
+        now = time.monotonic()
+        for tname, req in picked:
+            self._queues[tname].remove(req)
+            ts = self._tstats(tname)
+            ts.admitted += 1
+            wait = max(0.0, now - req.submitted_at)
+            ts.queue_wait_s += wait
+            ts.max_queue_wait_s = max(ts.max_queue_wait_s, wait)
+        self._update_shed()
         self._do_prefill_wave(wave)
-        return n
+        return len(wave)
 
     # ------------------------------------------------------------ internals
     @staticmethod
@@ -459,14 +700,14 @@ class SynergyServer:
         self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
         self.stats.runtime_steals += sum(a["steals"] for a in acct.values())
 
-    def _fut_result(self, fut):
+    def _fut_result(self, fut, rids: tuple = (), tenants: tuple = ()):
         try:
             return fut.result(timeout=self.submit_timeout)
         except TimeoutError:
             raise ServeTimeoutError(fut.jobset.name, self.submit_timeout,
-                                    fut.accounting) from None
+                                    fut.accounting, rids, tenants) from None
 
-    def _graph_result(self, gf):
+    def _graph_result(self, gf, rids: tuple = (), tenants: tuple = ()):
         """Block on one prefill graph; a timeout CANCELS the graph —
         not-yet-started downstream nodes never launch and queued panels
         are drained — before surfacing :class:`ServeTimeoutError`."""
@@ -475,7 +716,45 @@ class SynergyServer:
         except TimeoutError:
             gf.cancel("serving submit_timeout")
             raise ServeTimeoutError(gf.name, self.submit_timeout,
-                                    gf.accounting) from None
+                                    gf.accounting, rids, tenants) from None
+
+    # ----------------------------------------------------------- QoS tags
+    def _req_tenant(self, req: Optional[Request]) -> Optional[Tenant]:
+        if req is None or not self._qos_enabled:
+            return None
+        return self.tenants.get(req.tenant)
+
+    def _decode_qos(self, slots: Sequence[int]) -> Optional[QosTag]:
+        """The coalesced decode submission's tag: the MOST urgent live
+        member wins — max priority, earliest absolute deadline."""
+        if not self._qos_enabled:
+            return None
+        prio, dl = None, math.inf
+        for s in slots:
+            t = self._req_tenant(self.slot_req[s])
+            if t is None:
+                continue
+            prio = (t.qos.priority if prio is None
+                    else max(prio, t.qos.priority))
+            dl = min(dl, self.slot_req[s].deadline_at)
+        return None if prio is None else QosTag(prio, dl)
+
+    def _prefill_qos(self, wave: list) -> Optional[QosTag]:
+        """The wave's prefill tag: its most urgent member's class, one
+        priority notch below decode (``PREFILL_PRIORITY_OFFSET``) so
+        decode-class panels preempt bulk prefill at chunk boundaries."""
+        if not self._qos_enabled:
+            return None
+        prio, dl = None, math.inf
+        for req, _, _ in wave:
+            t = self._req_tenant(req)
+            if t is None:
+                continue
+            prio = (t.qos.priority if prio is None
+                    else max(prio, t.qos.priority))
+            dl = min(dl, req.deadline_at)
+        return (None if prio is None
+                else QosTag(prio + PREFILL_PRIORITY_OFFSET, dl))
 
     # ------------------------------------------------------ in-flight window
     def _push_inflight(self, inf: _Inflight) -> None:
@@ -494,9 +773,10 @@ class SynergyServer:
         device-side ``max|a|`` launched at submit."""
         inf = self._inflight.popleft()
         if inf.graph is not None:
-            self._graph_result(inf.graph)
+            self._graph_result(inf.graph, inf.rids, inf.tenant_names)
             self._book_runtime(inf.kind, inf.graph.accounting)
-        results = [self._fut_result(f) for f in inf.futures]
+        results = [self._fut_result(f, inf.rids, inf.tenant_names)
+                   for f in inf.futures]
         for fut in inf.futures:
             self._book_runtime(inf.kind, fut.accounting)
         if inf.kind == "decode" and inf.layout is not None:
@@ -505,7 +785,16 @@ class SynergyServer:
             if inf.wide:
                 # real-FFN n-stacked layout: rows are slots already
                 n_per = n_cols // nl
-                if len(results) == 1:  # batched: (live, nl·n_per)
+                if inf.groups is not None:
+                    # shed-ladder split: stitch the class groups' rows
+                    # back into live-slot order
+                    rows: list = [None] * live
+                    for g, res in zip(inf.groups, results):
+                        r3 = res.reshape(len(g), nl, n_per)
+                        for k, j in enumerate(g):
+                            rows[j] = r3[k]
+                    y = jnp.stack(rows, 0)
+                elif len(results) == 1:  # batched: (live, nl·n_per)
                     y = results[0].reshape(live, nl, n_per)
                 else:                  # per-slot: one (1, nl·n_per) each
                     y = jnp.stack([r.reshape(nl, n_per) for r in results], 0)
@@ -541,6 +830,36 @@ class SynergyServer:
                 return True
         return False
 
+    def _has_int8_engine(self) -> bool:
+        """Whether the pool has an int8 engine — the shed ladder's
+        degraded decode tier requires one (``decode_degraded`` is a hard
+        int8 job class; without the engine shedding stays at rejection
+        only)."""
+        if self.runtime is None:
+            return False
+        for name in self.runtime.engine_names:
+            eng = self.runtime.find_engine(name)
+            if eng is not None and CAP_INT8 in eng.capabilities:
+                return True
+        return False
+
+    def _degraded_rows(self, live: Sequence[int]) -> list[int]:
+        """Row indices (into ``live``) whose slot belongs to a SHEDDABLE
+        tenant while the load-shed ladder is engaged — their decode steps
+        are routed through the int8-only ``decode_degraded`` class so the
+        fp32 pool stays free for interactive traffic."""
+        self._update_shed()
+        if (not self._qos_enabled or self._shed_level == 0
+                or not self._has_int8_engine()):
+            return []
+        out = []
+        for j, slot in enumerate(live):
+            req = self.slot_req[slot]
+            t = self.tenants.get(req.tenant) if req is not None else None
+            if t is not None and t.qos.sheddable:
+                out.append(j)
+        return out
+
     # -------------------------------------------------------------- prefill
     def _wave_frames(self, toks: jax.Array) -> Optional[jax.Array]:
         """The wave's conv-front-end input: each prompt token becomes one
@@ -565,15 +884,17 @@ class SynergyServer:
         one gather per conv layer) hooks the serving module as before."""
         return im2col_wave(x, kh, kw, stride, pad)
 
-    def _submit_prefill(self, job: PrefillJob,
-                        frames: Optional[jax.Array]) -> Optional[_ConvProgress]:
+    def _submit_prefill(self, job: PrefillJob, frames: Optional[jax.Array],
+                        qos: Optional[QosTag] = None,
+                        tenant_names: tuple = ()) -> Optional[_ConvProgress]:
         """Route the wave's conv JobSets: a REAL im2col+GEMM dataflow
         graph through the runtime when the pool can run grad-safe panels
         (chunked into a :class:`_ConvProgress` chain when
         ``prefill_chunk_macs`` is set, else one graph reaped through the
         in-flight window), a single batched accounting submission
         (``submit_many``) otherwise, and plain dispatcher estimates
-        without a runtime.  Returns the in-flight chunk chain, if any."""
+        without a runtime.  ``qos`` tags every panel with the wave's
+        prefill class.  Returns the in-flight chunk chain, if any."""
         jobsets = job.jobsets()
         if not jobsets:
             return None
@@ -591,16 +912,20 @@ class SynergyServer:
                 job.wave,
                 [([steps[i] for i in g], [jobsets[i] for i in g])
                  for g in groups],
-                frames, None, job.n_frames, hint, total=len(groups))
+                frames, None, job.n_frames, hint, total=len(groups),
+                qos=qos, rids=job.rids, tenant_names=tenant_names)
             self._submit_conv_chunk(conv)
             if self.prefill_chunk_macs is None:
                 # legacy: ONE graph for the whole wave, reaped (and
                 # cancelled on timeout) through the in-flight window
-                self._push_inflight(_Inflight("prefill", [], graph=conv.fut))
+                self._push_inflight(_Inflight(
+                    "prefill", [], graph=conv.fut, rids=job.rids,
+                    tenant_names=tenant_names))
                 return None
             return conv
-        futs = self.runtime.submit_many(jobsets, affinity=hint)
-        self._push_inflight(_Inflight("prefill", futs))
+        futs = self.runtime.submit_many(jobsets, affinity=hint, qos=qos)
+        self._push_inflight(_Inflight("prefill", futs, rids=job.rids,
+                                      tenant_names=tenant_names))
         return None
 
     def _submit_conv_chunk(self, conv: _ConvProgress) -> None:
@@ -612,11 +937,12 @@ class SynergyServer:
         nodes, edges = conv_wave_graph(
             self.prefill_cnn, self._cnn_params, conv.x, steps, jss,
             conv.n_frames, in_shape=conv.in_shape, affinity=conv.hint,
-            im2col_fn=self._im2col)
+            im2col_fn=self._im2col, qos=conv.qos)
         name = (f"prefill/w{conv.wave}" if conv.total == 1
                 else f"prefill/w{conv.wave}/c{conv.idx}")
         conv.fut = self.runtime.submit_graph(nodes, edges,
-                                             affinity=conv.hint, name=name)
+                                             affinity=conv.hint, name=name,
+                                             qos=conv.qos)
         # the next chunk's first gather reshapes this chunk's flat output
         oh, ow, cout = steps[-1][3]
         conv.in_shape = (conv.n_frames, oh, ow, cout)
@@ -643,7 +969,8 @@ class SynergyServer:
     def _harvest_conv_blocking(self, conv: _ConvProgress) -> None:
         """Drain-path chunk harvest: block under ``submit_timeout``."""
         if conv.fut is not None:
-            vals = self._graph_result(conv.fut)
+            vals = self._graph_result(conv.fut, conv.rids,
+                                      conv.tenant_names)
             self._book_runtime("prefill", conv.fut.accounting)
             conv.x = vals[-1]
             conv.fut = None
@@ -662,7 +989,10 @@ class SynergyServer:
                          n_frames=sum(lens), cnn=self.prefill_cnn)
         frames = self._wave_frames(
             jnp.concatenate([toks for _, _, toks in wave]))
-        conv = self._submit_prefill(job, frames)
+        conv = self._submit_prefill(
+            job, frames, qos=self._prefill_qos(wave),
+            tenant_names=tuple(r.tenant for r, _, _ in wave
+                               if r.tenant))
 
         # slot reuse: zero the admitted slots' cache rows (every cache
         # tensor — K/V and SSM states alike — carries batch at axis 1).
@@ -720,6 +1050,8 @@ class SynergyServer:
             self.slot_req[slot] = req
             self.slot_pos[slot] = ln
             self.stats.prefills += 1
+            if self._qos_enabled and req.tenant in self.tenants:
+                self._tstats(req.tenant).prefills += 1
             self._prefilling.discard(slot)
         prog.finalized = True
 
@@ -792,35 +1124,75 @@ class SynergyServer:
         js = job.jobset()
         hint_eng = self._affinity_hint(js, "decode")
         hint = hint_eng.name if hint_eng is not None else None
+        qos = self._decode_qos(job.slots)
+        rids = tuple(self.slot_req[s].rid for s in job.slots
+                     if self.slot_req[s] is not None)
+        tnames = tuple(self.slot_req[s].tenant for s in job.slots
+                       if self.slot_req[s] is not None
+                       and self.slot_req[s].tenant)
         if acts is None:
             # no embedding table: accounting-only coalesced submission
-            fut = self.runtime.submit(js, affinity=hint)
-            self._push_inflight(_Inflight("decode", [fut]))
+            fut = self.runtime.submit(js, affinity=hint, qos=qos)
+            self._push_inflight(_Inflight("decode", [fut], rids=rids,
+                                          tenant_names=tnames))
             return
         d, nl = self.cfg.d_model, self.cfg.n_layers
         w = self._decode_w
         n_cols = int(w.shape[1])
         wide = self._decode_ffn_cols is not None
+        deg = self._degraded_rows(job.slots)
+        degraded_applied = False
         cal = self._calibration_engine()
         if cal is None and hasattr(hint_eng, "observe_amax"):
             cal = hint_eng
         # device-side max|a| launched NOW, folded into the EMA at reap —
         # skipped entirely when nothing will consume it (fp32-only pool)
         amax = jnp.max(jnp.abs(acts)) if cal is not None else None
+        groups = None
         if self.decode_mode == "batched":
             # ONE coalesced submission: real-FFN mode stacks every
             # layer's wi along n (rows = live slots); the proxy stacks
             # the per-layer GEMM along m — either way, one row-panel
             # split amortizes dispatch
-            a = acts if wide else jnp.tile(acts, (nl, 1))
-            futs = [self.runtime.submit_gemm(
-                a, w, jobset=js, tile=(_SERVE_TILE,) * 3,
-                job_class="decode", affinity=hint, observe_acts=False)]
+            if wide and deg and len(deg) < len(job.slots):
+                # shed ladder engaged on a mixed wave: split the row
+                # panel so sheddable tenants' rows run through the
+                # int8-only degraded class while the rest keep the full
+                # decode class (stitched back by row index at reap)
+                norm = tuple(j for j in range(len(job.slots))
+                             if j not in set(deg))
+                groups = (norm, tuple(deg))
+                degraded_applied = True
+                futs = []
+                for g, jc in zip(groups, ("decode", "decode_degraded")):
+                    js_g = JobSet.for_gemm(
+                        job.step, len(g), n_cols, d, _SERVE_TILE,
+                        name=f"decode/s{job.step}/{jc}")
+                    h_eng = self._affinity_hint(js_g, jc)
+                    futs.append(self.runtime.submit_gemm(
+                        acts[jnp.array(g)], w, jobset=js_g,
+                        tile=(_SERVE_TILE,) * 3, job_class=jc,
+                        affinity=h_eng.name if h_eng is not None else None,
+                        qos=self._decode_qos([job.slots[j] for j in g]),
+                        observe_acts=False))
+            else:
+                jc = "decode"
+                if wide and deg and len(deg) == len(job.slots):
+                    jc = "decode_degraded"
+                    degraded_applied = True
+                a = acts if wide else jnp.tile(acts, (nl, 1))
+                futs = [self.runtime.submit_gemm(
+                    a, w, jobset=js, tile=(_SERVE_TILE,) * 3,
+                    job_class=jc, affinity=hint, qos=qos,
+                    observe_acts=False)]
         else:
             # the sequential per-slot baseline (one submission per slot)
             futs = []
+            degset = set(deg)
             for j, slot in enumerate(job.slots):
                 m_j = 1 if wide else nl
+                jc = "decode_degraded" if j in degset else "decode"
+                degraded_applied = degraded_applied or jc != "decode"
                 js_j = JobSet.for_gemm(
                     job.step, m_j, n_cols, d, _SERVE_TILE,
                     name=f"decode/s{job.step}/slot{slot}")
@@ -828,10 +1200,18 @@ class SynergyServer:
                        else jnp.tile(acts[j:j + 1], (nl, 1)))
                 futs.append(self.runtime.submit_gemm(
                     a_j, w, jobset=js_j, tile=(_SERVE_TILE,) * 3,
-                    job_class="decode", affinity=hint, observe_acts=False))
+                    job_class=jc, affinity=hint, qos=qos,
+                    observe_acts=False))
+        if degraded_applied:
+            self.stats.shed_degraded_steps += 1
+            for j in deg:
+                req = self.slot_req[job.slots[j]]
+                if req is not None and req.tenant in self.tenants:
+                    self._tstats(req.tenant).degraded_steps += 1
         self._push_inflight(_Inflight(
             "decode", futs, cal_engine=cal, amax=amax, cal_key=(d, n_cols),
-            layout=(len(job.slots), nl), wide=wide))
+            layout=(len(job.slots), nl), wide=wide, groups=groups,
+            rids=rids, tenant_names=tnames))
 
     def _do_decode(self) -> None:
         live = tuple(i for i, r in enumerate(self.slot_req) if r is not None)
@@ -861,6 +1241,7 @@ class SynergyServer:
         # ONE device argmax + ONE host sync for the whole batch (a
         # per-slot int(jnp.argmax(...)) costs an eager op + sync per slot)
         nxt_all = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        now = time.monotonic()
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
@@ -868,7 +1249,19 @@ class SynergyServer:
             r.out.append(nxt)
             self.slot_pos[i] += 1
             self.stats.tokens_out += 1
+            if self._qos_enabled and r.tenant in self.tenants:
+                self._tstats(r.tenant).tokens_out += 1
             done = (len(r.out) >= r.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1)
             if done:
+                # stamped on EVERY server so attainment is computable
+                # post-hoc even without tenancy
+                r.done_at = now
+                if (self._qos_enabled and r.tenant in self.tenants
+                        and math.isfinite(r.deadline_at)):
+                    ts = self._tstats(r.tenant)
+                    if now <= r.deadline_at:
+                        ts.deadline_hits += 1
+                    else:
+                        ts.deadline_misses += 1
                 self.slot_req[i] = None   # free the slot (continuous batching)

@@ -117,6 +117,8 @@ class Telemetry:
     steals: int = 0
     wall_busy_s: float = 0.0
     idle_s: float = 0.0
+    #: times this engine was quarantined by a self-healing pool
+    quarantines: int = 0
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -138,11 +140,13 @@ class Telemetry:
             self.steals += steals
 
     def record_runtime(self, *, wall_busy_s: float = 0.0,
-                       idle_s: float = 0.0) -> None:
-        """Measured worker-thread time (live runtime only)."""
+                       idle_s: float = 0.0, quarantines: int = 0) -> None:
+        """Measured worker-thread time + health events (live runtime
+        only)."""
         with self._lock:
             self.wall_busy_s += wall_busy_s
             self.idle_s += idle_s
+            self.quarantines += quarantines
 
     @property
     def busy_fraction(self) -> float:
@@ -161,12 +165,14 @@ class Telemetry:
             self.steals += snap.steals
             self.wall_busy_s += snap.wall_busy_s
             self.idle_s += snap.idle_s
+            self.quarantines += snap.quarantines
 
     def snapshot(self) -> "Telemetry":
         with self._lock:
             return Telemetry(self.gemms, self.jobs, self.busy_s,
                              self.bytes_moved, self.steals,
-                             self.wall_busy_s, self.idle_s)
+                             self.wall_busy_s, self.idle_s,
+                             self.quarantines)
 
     def reset(self) -> None:
         with self._lock:
@@ -177,6 +183,7 @@ class Telemetry:
             self.steals = 0
             self.wall_busy_s = 0.0
             self.idle_s = 0.0
+            self.quarantines = 0
 
 
 class Engine(abc.ABC):

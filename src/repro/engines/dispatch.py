@@ -67,6 +67,11 @@ class JobClassPolicy:
 #: (JOB_CLASSES["prefill"] is plain data, not policy machinery).
 JOB_CLASSES: dict[str, JobClassPolicy] = {
     "decode": JobClassPolicy(prefer=frozenset({CAP_INT8})),
+    # the serving load-shed ladder's degraded tier: sheddable tenants'
+    # decode REQUIRES an int8 engine, freeing the fp32 pool for
+    # interactive traffic (see repro.soc.qos)
+    "decode_degraded": JobClassPolicy(require=frozenset({CAP_INT8}),
+                                      prefer=frozenset({CAP_INT8})),
     "prefill": JobClassPolicy(require=frozenset({CAP_GRAD})),
     "train": JobClassPolicy(require=frozenset({CAP_GRAD})),
 }

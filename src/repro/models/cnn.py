@@ -226,7 +226,7 @@ def conv_wave_graph(cfg: CNNConfig, params: dict, x0: jax.Array,
                     n_frames: int, *, in_shape: tuple | None = None,
                     affinity: str | None = None,
                     job_class: str | None = "prefill",
-                    im2col_fn=None):
+                    im2col_fn=None, qos=None):
     """Build the ``(nodes, edges)`` dataflow graph of one prefill wave's
     conv front-end over a consecutive slice of :func:`conv_graph_steps`.
 
@@ -242,7 +242,10 @@ def conv_wave_graph(cfg: CNNConfig, params: dict, x0: jax.Array,
     ``in_shape`` to restore (N, H, W, C)).  The LAST node's value is the
     final conv's flat ``(m, cout)`` output.  ``im2col_fn`` overrides the
     gather primitive (the serving engine passes its own module reference
-    so instrumentation hooks on that module see every wave gather)."""
+    so instrumentation hooks on that module see every wave gather);
+    ``qos`` attaches a :class:`repro.soc.qos_policy.QosTag` to every GEMM
+    node's panels, so a chunked prefill wave schedules at its tenants'
+    class and decode-class work preempts it at chunk boundaries."""
     from repro.core.im2col import im2col_wave
     from repro.soc.graph import GraphNode
     if im2col_fn is None:
@@ -267,7 +270,7 @@ def conv_wave_graph(cfg: CNNConfig, params: dict, x0: jax.Array,
                 a, params[f"conv{_i}_w"].reshape(-1, _cout), jobset=_js,
                 bias=params[f"conv{_i}_b"], activation=jax.nn.relu,
                 tile=(_js.ts_m, _js.ts_n, _js.ts_k), job_class=job_class,
-                affinity=affinity)
+                affinity=affinity, qos=qos)
 
         gi = len(nodes)
         nodes.append(GraphNode(name=f"{js.name}/gather", run=gather))

@@ -17,14 +17,23 @@ so simulated and live steal decisions agree for identical cost models.
 from .graph import GraphCancelled, GraphFuture, GraphNode
 from .policy import (STEAL_QUEUE_DEPTH, STEAL_RATE_FLOOR, lpt_pick,
                      pick_victim, should_steal)
+from .qos import (AdmissionRejected, EngineHealth, HealthPolicy, Tenant)
+from .qos_policy import (BEST_EFFORT, BULK, DEFAULT_CLASS, INTERACTIVE,
+                         NEUTRAL_TAG, FairShare, QosClass, QosTag,
+                         effective_deadline, qos_victim, queue_insert_index)
 from .runtime import (RuntimeFuture, SynergyRuntime, current_runtime,
                       runtime_scope)
-from .simrt import SimGraphResult, SimRuntime, SimRuntimeResult
+from .simrt import (SimGraphResult, SimQosResult, SimRuntime,
+                    SimRuntimeResult)
 
 __all__ = [
     "SynergyRuntime", "RuntimeFuture", "runtime_scope", "current_runtime",
-    "SimRuntime", "SimRuntimeResult", "SimGraphResult",
+    "SimRuntime", "SimRuntimeResult", "SimGraphResult", "SimQosResult",
     "GraphNode", "GraphFuture", "GraphCancelled",
     "should_steal", "pick_victim", "lpt_pick",
     "STEAL_RATE_FLOOR", "STEAL_QUEUE_DEPTH",
+    "QosClass", "QosTag", "NEUTRAL_TAG", "DEFAULT_CLASS", "INTERACTIVE",
+    "BULK", "BEST_EFFORT", "FairShare", "effective_deadline",
+    "qos_victim", "queue_insert_index",
+    "Tenant", "AdmissionRejected", "HealthPolicy", "EngineHealth",
 ]

@@ -42,6 +42,8 @@ import dataclasses
 import threading
 from typing import Any, Callable, Optional, Sequence
 
+from .qos_policy import NEUTRAL_TAG
+
 __all__ = ["GraphNode", "GraphFuture", "GraphCancelled", "validate_dag"]
 
 
@@ -173,7 +175,7 @@ class _GraphRun:
     executor threads; both funnel through :meth:`_node_done`."""
 
     def __init__(self, rt, nodes, edges, *, affinity: Optional[str],
-                 granularity: str, name: str):
+                 granularity: str, name: str, qos=None):
         norm: list[GraphNode] = []
         for node in nodes:
             if isinstance(node, GraphNode):
@@ -189,6 +191,10 @@ class _GraphRun:
         self.remaining = [len(p) for p in self.preds]
         self.affinity = affinity
         self.granularity = granularity
+        #: QosTag every node submission of this graph carries (None =
+        #: neutral) — chunked prefill graphs inherit their wave's class,
+        #: which is what lets decode preempt them at chunk boundaries
+        self.qos = qos
         n = len(norm)
         self.values: list[Any] = [None] * n
         self.state = ["waiting"] * n   # running | done | failed | cancelled
@@ -264,7 +270,10 @@ class _GraphRun:
             self._node_done(i, fut._value, fut._error)
 
         sub = _Submission(node.jobset, len(units), None, on_done=on_done)
-        jobs = [_RuntimeJob(sub, u, fn, n_jobs, macs, nbytes)
+        tag = self.qos or NEUTRAL_TAG
+        jobs = [_RuntimeJob(sub, u, fn, n_jobs, macs, nbytes,
+                            priority=tag.priority,
+                            deadline_at=tag.deadline_at)
                 for u, (fn, n_jobs, macs, nbytes) in enumerate(units)]
         self.node_futs[i] = sub.future
         rt._submissions += 1

@@ -7,6 +7,13 @@ simulator (:func:`repro.core.scheduler.simulate`), the live
 :class:`repro.soc.SynergyRuntime` workers, and the virtual-time
 :class:`repro.soc.SimRuntime` all import THESE so a steal decision made in
 simulation is the decision made on live engines for identical cost models.
+
+The QoS layer (:mod:`repro.soc.qos_policy`) composes with — never replaces
+— these functions: deadline-aware seeding still places with
+:func:`lpt_pick`, and priority-aware victim choice
+(:func:`~repro.soc.qos_policy.qos_victim`) restricts the candidate set by
+tail priority and then breaks ties with :func:`pick_victim` verbatim, so
+an all-neutral workload takes exactly the decisions written here.
 """
 
 from __future__ import annotations

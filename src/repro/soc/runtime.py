@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import math
 import os
 import threading
 import time
@@ -47,7 +48,10 @@ from repro.engines.dispatch import JOB_CLASSES
 from repro.engines.registry import (add_registry_listener, get_engine,
                                     remove_registry_listener)
 
-from .policy import lpt_pick, pick_victim, should_steal
+from .policy import lpt_pick, should_steal
+from .qos import EngineHealth, HealthPolicy
+from .qos_policy import (NEUTRAL_TAG, QosTag, effective_deadline,
+                         qos_victim, queue_insert_index)
 
 __all__ = ["SynergyRuntime", "RuntimeFuture", "runtime_scope",
            "current_runtime"]
@@ -134,14 +138,22 @@ class _RuntimeJob:
     carries the caller's precision opt-in ON the job, so every placement
     path — seed, steal, rebalance, engine removal, hotplug — enforces it:
     a job that never opted into int8 cannot land on a CAP_INT8 worker, no
-    matter how the pool changes after submission."""
+    matter how the pool changes after submission.
+
+    ``priority``/``deadline_at`` carry the submission's QoS tag the same
+    way (see :mod:`repro.soc.qos_policy`): every placement path orders by
+    them, and a queue stays sorted non-increasing in priority, so the
+    head is always the most urgent panel and the tail the most stealable
+    one.  Neutral jobs (priority 0, no deadline) place exactly as the
+    pre-QoS runtime did."""
 
     __slots__ = ("sub", "index", "fn", "n_jobs", "job_macs", "job_bytes",
-                 "stealable", "int8_ok")
+                 "stealable", "int8_ok", "priority", "deadline_at")
 
     def __init__(self, sub: "_Submission", index: int, fn, n_jobs: int,
                  job_macs: int, job_bytes: int, stealable: bool = True,
-                 int8_ok: bool = True):
+                 int8_ok: bool = True, priority: int = 0,
+                 deadline_at: float = math.inf):
         self.sub = sub
         self.index = index
         self.fn = fn
@@ -150,6 +162,8 @@ class _RuntimeJob:
         self.job_bytes = job_bytes
         self.stealable = stealable
         self.int8_ok = int8_ok
+        self.priority = priority
+        self.deadline_at = deadline_at
 
 
 class _Submission:
@@ -202,6 +216,8 @@ class _Worker:
     def __init__(self, engine: Engine):
         self.engine = engine
         self.queue: deque[_RuntimeJob] = deque()
+        #: EngineHealth when the runtime runs a HealthPolicy, else None
+        self.health: Optional[EngineHealth] = None
         self.thread: Optional[threading.Thread] = None
         self.stopped = False
         self.idle = False
@@ -228,6 +244,10 @@ class _Worker:
         except NotImplementedError:
             return 0.0
 
+    @property
+    def quarantined(self) -> bool:
+        return self.health is not None and self.health.quarantined
+
 
 # ---------------------------------------------------------------------------
 # The runtime
@@ -247,7 +267,8 @@ class SynergyRuntime:
                  follow_registry: bool = False, name: str = "runtime",
                  recalibrate_every: Optional[int] = None,
                  recalibrate_alpha: float = 0.5,
-                 rates_path: Optional[Union[str, os.PathLike]] = None):
+                 rates_path: Optional[Union[str, os.PathLike]] = None,
+                 health: Optional[HealthPolicy] = None):
         """``recalibrate_every=N`` makes the runtime self-calibrating: every
         N completed submissions it folds measured worker rates into the
         cost models (the serving analog of the paper's offline
@@ -256,11 +277,22 @@ class SynergyRuntime:
         sidecar after each recalibration and re-applies it on
         construction, so a restarted process starts from the measured
         rates (e.g. the real qmm kernel's) instead of the nominal
-        constants.  CAP_SIM engines are excluded from both directions."""
+        constants.  CAP_SIM engines are excluded from both directions.
+
+        ``health=HealthPolicy(...)`` makes the pool SELF-HEALING: every
+        worker's measured per-panel MAC rate feeds an EMA, a worker whose
+        rate decays below the policy threshold is quarantined (deque
+        rebalanced onto the survivors, cost model decayed to the measured
+        rate, no new seeds or steals), probed on a cadence, and
+        re-admitted once it measures healthy again (see
+        :mod:`repro.soc.qos`).  ``health=None`` (default) disables all
+        of it — zero overhead, zero behavior change."""
         self.name = name
         self.require = frozenset(require)
         self._recal_every = recalibrate_every
         self._recal_alpha = recalibrate_alpha
+        self._health = health
+        self._quarantines = 0
         self._rates_path = os.fspath(rates_path) if rates_path else None
         self._completed = 0    # finished submissions (cadence counter)
         # RLock: submission-completion hooks can fire from paths that
@@ -295,10 +327,16 @@ class SynergyRuntime:
         if not pool:
             raise ValueError("SynergyRuntime needs at least one engine")
         for eng in pool:
-            self._workers[eng.name] = _Worker(eng)
+            self._workers[eng.name] = self._new_worker(eng)
         self._follow_registry = follow_registry
         if self._rates_path:
             self._load_rates()
+
+    def _new_worker(self, eng: Engine) -> _Worker:
+        w = _Worker(eng)
+        if self._health is not None:
+            w.health = EngineHealth()
+        return w
 
     # ---------------------------------------------------------- lifecycle
     def start(self) -> "SynergyRuntime":
@@ -379,7 +417,7 @@ class SynergyRuntime:
         with self._cond:
             if eng.name in self._workers:
                 return
-            w = _Worker(eng)
+            w = self._new_worker(eng)
             self._workers[eng.name] = w
             if self._started:
                 self._spawn(w)
@@ -434,7 +472,7 @@ class SynergyRuntime:
                 old = self._workers.pop(engine.name, None)
                 orphans = (self._retire_worker_locked(old)
                            if old is not None else [])
-                w = _Worker(engine)
+                w = self._new_worker(engine)
                 self._workers[engine.name] = w
                 w.queue.extend(orphans)
                 if self._started:
@@ -462,20 +500,64 @@ class SynergyRuntime:
         self._rebalances += 1
 
     # --------------------------------------------------------- scheduling
+    @staticmethod
+    def _seed_order(jobs: Sequence[_RuntimeJob],
+                    best_rate: float) -> Sequence[_RuntimeJob]:
+        """Deadline-aware seed order: priority descending, then earliest
+        EFFECTIVE deadline (deadline minus the fastest healthy member's
+        cost-model service estimate) within a class, submission order as
+        the stable tie-break.  All-neutral batches return unsorted — the
+        pre-QoS FIFO order, byte for byte."""
+        if all(j.priority == 0 and j.deadline_at == math.inf for j in jobs):
+            return jobs
+
+        def key(j: _RuntimeJob):
+            est = (j.n_jobs * j.job_macs / best_rate if best_rate > 0
+                   else 0.0)
+            return (-j.priority, effective_deadline(j.deadline_at, est))
+
+        return sorted(jobs, key=key)
+
+    @staticmethod
+    def _enqueue(q: deque, job: _RuntimeJob) -> None:
+        """Priority insertion that keeps the deque sorted non-increasing
+        in priority (head = most urgent, tail = most stealable).  Neutral
+        traffic into a neutral queue is a plain O(1) append."""
+        if not q or job.priority <= q[-1].priority:
+            q.append(job)
+        else:
+            q.insert(queue_insert_index([j.priority for j in q],
+                                        job.priority), job)
+
     def _seed_locked(self, jobs: Sequence[_RuntimeJob],
                      affinity: Optional[str]) -> None:
         """Seed jobs with per-job precision eligibility: a job whose
         ``int8_ok`` is False never lands on a CAP_INT8 worker (the
         dispatcher's opt-in invariant, enforced at the queue level so
         rebalances and removals preserve it too).  A job with NO eligible
-        worker fails its submission instead of crashing the seed."""
+        worker fails its submission instead of crashing the seed.
+
+        QoS: jobs are seeded in deadline-aware order (priority, then
+        effective deadline), quarantined workers are skipped unless the
+        job has no healthy eligible engine, and each job enters its queue
+        at its priority position (:func:`~repro.soc.qos_policy.
+        queue_insert_index`) — a decode panel lands ahead of queued bulk
+        prefill panels, never mid-panel."""
         workers = list(self._workers.values())
         is_int8 = [CAP_INT8 in w.engine.capabilities for w in workers]
+        quar = [w.quarantined for w in workers]
         loads = [sum(j.n_jobs * w.job_time(j.job_macs, j.job_bytes)
                      for j in w.queue) for w in workers]
-        for job in jobs:
+        best_rate = max((w.rate for w, q in zip(workers, quar) if not q),
+                        default=0.0)
+        for job in self._seed_order(jobs, best_rate):
             idxs = [i for i in range(len(workers))
-                    if job.int8_ok or not is_int8[i]]
+                    if (job.int8_ok or not is_int8[i]) and not quar[i]]
+            if not idxs:
+                # every eligible engine quarantined: degraded placement
+                # beats failing the submission
+                idxs = [i for i in range(len(workers))
+                        if job.int8_ok or not is_int8[i]]
             if not idxs:
                 job.sub.complete(
                     job, "<unplaceable>", None,
@@ -492,15 +574,29 @@ class SynergyRuntime:
                 ai = lpt_pick(idxs, loads, costs)
             loads[ai] += (workers[ai].job_time(job.job_macs, job.job_bytes)
                           * job.n_jobs)
-            workers[ai].queue.append(job)
+            self._enqueue(workers[ai].queue, job)
 
     def _try_steal_locked(self, thief: _Worker):
-        """The stealer: busiest VIABLE victim queue, shared tail-guard
-        policy, steal from the TAIL (victims pop their own head).  A queue
-        whose tail job is precision-pinned (mixed-pool panel), or whose
-        tail the THIEF may not run (int8 thief, non-opted-in job), is not
-        viable — but other queues still are, so interleaved accounting
-        traffic keeps stealing even while a pinned split is in flight."""
+        """The stealer: priority-aware victim choice over VIABLE queues,
+        shared tail-guard policy, steal from the TAIL (victims pop their
+        own head).  A queue whose tail job is precision-pinned
+        (mixed-pool panel), or whose tail the THIEF may not run (int8
+        thief, non-opted-in job), is not viable — but other queues still
+        are, so interleaved accounting traffic keeps stealing even while
+        a pinned split is in flight.
+
+        QoS: among viable victims, thieves prefer the one holding the
+        LOWEST-priority tail (:func:`~repro.soc.qos_policy.qos_victim` —
+        bulk panels move out of the way first; queues are priority-sorted
+        so a tail is always its queue's least important panel).  A
+        quarantined thief steals nothing except its probation probe: one
+        panel per ``probe_interval_s``, to re-measure itself."""
+        h = thief.health
+        probe = False
+        if h is not None and h.quarantined:
+            if not h.probe_due(time.monotonic(), self._health):
+                return None
+            probe = True
         thief_int8 = CAP_INT8 in thief.engine.capabilities
         names = [n for n, w in self._workers.items()
                  if n != thief.engine.name and w.queue
@@ -508,11 +604,15 @@ class SynergyRuntime:
                  and (w.queue[-1].int8_ok or not thief_int8)]
         if not names:
             return None
+        prios = [self._workers[n].queue[-1].priority for n in names]
         lens = [len(self._workers[n].queue) for n in names]
-        victim = self._workers[names[pick_victim(lens)]]
-        fastest = max(w.rate for w in self._workers.values())
+        victim = self._workers[names[qos_victim(prios, lens)]]
+        fastest = max((w.rate for w in self._workers.values()
+                       if not w.quarantined), default=thief.rate)
         rel = thief.rate / fastest if fastest > 0 else 1.0
         if should_steal(rel, len(victim.queue)):
+            if probe:
+                h.last_probe_s = time.monotonic()
             return victim.queue.pop()
         return None
 
@@ -576,7 +676,66 @@ class SynergyRuntime:
         eng.telemetry.record_jobs(job.n_jobs, est, job.n_jobs * job.job_bytes,
                                   steals=int(stolen))
         eng.telemetry.record_runtime(wall_busy_s=dt)
+        if (self._health is not None and job.fn is not None
+                and err is None and dt > 0 and job.job_macs > 0):
+            # self-healing: only REAL compute measures a health rate, for
+            # the same reason recalibration ignores accounting-only jobs
+            self._health_tick(w, job.n_jobs * job.job_macs / dt)
         job.sub.complete(job, eng.name, part, err, est, stolen)
+
+    # ------------------------------------------------------- self-healing
+    def _health_tick(self, w: _Worker, rate: float) -> None:
+        """Fold one measured per-panel rate into the worker's health EMA
+        and act on the quarantine / readmission thresholds."""
+        pol = self._health
+        with self._cond:
+            h = w.health
+            if h is None or w.stopped:
+                return
+            h.observe(rate, pol)
+            if h.should_quarantine(pol):
+                self._quarantine_locked(w)
+            elif h.quarantined and h.recovered(pol):
+                self._readmit_locked(w)
+
+    def _quarantine_locked(self, w: _Worker) -> None:
+        """Quarantine a sick worker: decay its cost model to the MEASURED
+        rate (planning must see the truth, not the nominal constant),
+        drain its stealable queued panels onto the survivors via the
+        hotplug seeding path, and stop seeding/stealing to it — it still
+        runs its own pinned leftovers, and probes one stolen panel per
+        ``probe_interval_s`` to earn readmission.  The LAST healthy
+        worker is never quarantined: a degraded pool beats a dead one."""
+        others = [o for o in self._workers.values()
+                  if o is not w and not o.stopped and not o.quarantined]
+        if not others:
+            return
+        h = w.health
+        h.enter_quarantine(time.monotonic())
+        self._quarantines += 1
+        w.engine.telemetry.record_runtime(quarantines=1)
+        if CAP_SIM not in w.engine.capabilities and h.ema_rate > 0:
+            # alpha=1: the decayed measurement IS the engine's rate now
+            w.engine.recalibrate(h.ema_rate, alpha=1.0)
+        stealable = [j for j in w.queue if j.stealable]
+        pinned = [j for j in w.queue if not j.stealable]
+        w.queue.clear()
+        w.queue.extend(pinned)
+        if stealable:
+            self._seed_locked(stealable, affinity=None)
+        self._rebalances += 1
+        self._cond.notify_all()
+
+    def _readmit_locked(self, w: _Worker) -> None:
+        """Probation exit: the probes measured healthy again — restore the
+        cost model to the recovered rate and rebalance queued work back
+        across the full pool."""
+        h = w.health
+        h.exit_quarantine()
+        if CAP_SIM not in w.engine.capabilities and h.ema_rate > 0:
+            w.engine.recalibrate(h.ema_rate, alpha=1.0)
+        self._rebalance_locked()
+        self._cond.notify_all()
 
     # -------------------------------------------------------- submissions
     def _on_submission_done(self, fut: RuntimeFuture) -> None:
@@ -640,12 +799,14 @@ class SynergyRuntime:
     def _submit_jobs(self, jobset, units: list[tuple], merge,
                      affinity: Optional[str],
                      stealable: bool = True,
-                     int8_ok: bool = True) -> RuntimeFuture:
+                     int8_ok: bool = True,
+                     qos: Optional[QosTag] = None) -> RuntimeFuture:
         """units: list of (fn, n_jobs, job_macs, job_bytes)."""
+        tag = qos or NEUTRAL_TAG
         sub = _Submission(jobset, len(units), merge,
                           on_done=self._on_submission_done)
         jobs = [_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes, stealable,
-                            int8_ok)
+                            int8_ok, tag.priority, tag.deadline_at)
                 for i, (fn, n_jobs, macs, nbytes) in enumerate(units)]
         with self._cond:
             if not self._started:
@@ -669,16 +830,18 @@ class SynergyRuntime:
         return [(None, gn, j.macs, j.bytes_moved)] * gm
 
     def submit(self, jobset, *, affinity: Optional[str] = None,
-               granularity: str = "job") -> RuntimeFuture:
+               granularity: str = "job",
+               qos: Optional[QosTag] = None) -> RuntimeFuture:
         """Accounting-only submission: the JobSet's tile jobs are scheduled
         (and stolen) across the pool, booking cost-model busy time per
         engine, with no array compute.  This is how serving prefill/decode
         proxies flow through the runtime."""
         return self.submit_many([jobset], affinity=affinity,
-                                granularity=granularity)[0]
+                                granularity=granularity, qos=qos)[0]
 
     def submit_many(self, jobsets, *, affinity: Optional[str] = None,
-                    granularity: str = "job") -> list[RuntimeFuture]:
+                    granularity: str = "job",
+                    qos: Optional[QosTag] = None) -> list[RuntimeFuture]:
         """Batched accounting submission — the server-scale amortization
         path (ISSUE 5 §4): every JobSet of one admission wave goes through
         ONE manager-lock acquisition, one LPT seeding pass over ALL the
@@ -688,6 +851,7 @@ class SynergyRuntime:
         tick), so callers reap per-request accounting exactly as with N
         separate :meth:`submit` calls — only the dispatch overhead is
         shared.  Empty jobsets return already-finished futures in place."""
+        tag = qos or NEUTRAL_TAG
         futs: list[RuntimeFuture] = []
         jobs: list[_RuntimeJob] = []
         n_live = 0
@@ -700,7 +864,9 @@ class SynergyRuntime:
                 continue
             sub = _Submission(jobset, len(units), None,
                               on_done=self._on_submission_done)
-            jobs.extend(_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes)
+            jobs.extend(_RuntimeJob(sub, i, fn, n_jobs, macs, nbytes,
+                                    priority=tag.priority,
+                                    deadline_at=tag.deadline_at)
                         for i, (fn, n_jobs, macs, nbytes)
                         in enumerate(units))
             futs.append(sub.future)
@@ -717,7 +883,8 @@ class SynergyRuntime:
         return futs
 
     def submit_graph(self, nodes, edges, *, affinity: Optional[str] = None,
-                     granularity: str = "job", name: str = "graph"):
+                     granularity: str = "job", name: str = "graph",
+                     qos: Optional[QosTag] = None):
         """Submit a dependency GRAPH of nodes: each node is a
         :class:`~repro.core.job.JobSet` (accounting-only) or a
         :class:`repro.soc.graph.GraphNode` (host compute / nested
@@ -732,7 +899,7 @@ class SynergyRuntime:
         accounting, ``cancel()``)."""
         from .graph import _GraphRun
         run = _GraphRun(self, nodes, edges, affinity=affinity,
-                        granularity=granularity, name=name)
+                        granularity=granularity, name=name, qos=qos)
         run.start()
         return run.future
 
@@ -770,7 +937,8 @@ class SynergyRuntime:
                     tile=(256, 256, 256), out_dtype=None, precision=None,
                     affinity: Optional[str] = None,
                     job_class: Optional[str] = None,
-                    observe_acts: bool = True) -> RuntimeFuture:
+                    observe_acts: bool = True,
+                    qos: Optional[QosTag] = None) -> RuntimeFuture:
         """Split one GEMM's tile jobs across the pool as row panels; the
         future's result is the merged ``act(A @ B + bias)``.
 
@@ -848,7 +1016,7 @@ class SynergyRuntime:
                                       out_dtype=final_dtype)
 
             return self._submit_jobs(jobset, units, merge_q, affinity,
-                                     stealable=True, int8_ok=True)
+                                     stealable=True, int8_ok=True, qos=qos)
 
         def make_fn(r0: int, r1: int):
             def fn(eng: Engine):
@@ -876,7 +1044,8 @@ class SynergyRuntime:
             mixed = self._mixed_precision_pool()
             return self._submit_jobs(jobset, units, merge,
                                      None if mixed else affinity,
-                                     stealable=not mixed, int8_ok=int8_ok)
+                                     stealable=not mixed, int8_ok=int8_ok,
+                                     qos=qos)
 
     def _plan_int8_split(self, a, b, observe: bool = True):
         """Plan the shared quantization of an opted-in GEMM: observe the
@@ -919,13 +1088,15 @@ class SynergyRuntime:
                    tile=(256, 256, 256), out_dtype=None, precision=None,
                    affinity: Optional[str] = None,
                    job_class: Optional[str] = None,
-                   timeout: float = 300.0):
+                   timeout: float = 300.0,
+                   qos: Optional[QosTag] = None):
         """Blocking ``submit_gemm`` — what ``synergy_matmul`` calls under a
         :func:`runtime_scope`.  Returns (result, accounting)."""
         fut = self.submit_gemm(a, b, jobset=jobset, bias=bias,
                                activation=activation, tile=tile,
                                out_dtype=out_dtype, precision=precision,
-                               affinity=affinity, job_class=job_class)
+                               affinity=affinity, job_class=job_class,
+                               qos=qos)
         return fut.result(timeout), fut.accounting
 
     # ----------------------------------------------------- recalibration
@@ -972,6 +1143,9 @@ class SynergyRuntime:
                     "wall_busy_s": w.wall_busy_s, "idle_s": w.idle_s,
                     "busy_fraction": w.wall_busy_s / denom if denom else 0.0,
                     "queued": len(w.queue),
+                    "health": (w.health.health if w.health is not None
+                               else None),
+                    "quarantined": w.quarantined,
                 }
             ests = [p["est_busy_s"] for p in per.values()]
             agg = (sum(ests) / (len(ests) * max(ests))
@@ -982,6 +1156,7 @@ class SynergyRuntime:
                 "retired": retired,
                 "submissions": self._submissions,
                 "rebalances": self._rebalances,
+                "quarantines": self._quarantines,
                 # totals include retired engines' work so a hot-unplug
                 # never makes the counters go backwards
                 "total_jobs": sum(p["jobs"] for p in per.values())
@@ -1000,6 +1175,7 @@ class SynergyRuntime:
                 w.est_busy_s = w.wall_busy_s = w.idle_s = 0.0
             self._submissions = 0
             self._rebalances = 0
+            self._quarantines = 0
 
     def scope(self):
         """``with rt.scope(): ...`` — route every ``synergy_matmul`` in the

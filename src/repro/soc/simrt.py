@@ -23,9 +23,12 @@ from typing import Optional, Sequence, Union
 from repro.engines.base import Engine
 from repro.engines.registry import get_engine
 
-from .policy import pick_victim, should_steal
+from .policy import lpt_pick, pick_victim, should_steal
+from .qos_policy import (NEUTRAL_TAG, effective_deadline, qos_victim,
+                         queue_insert_index)
 
-__all__ = ["SimRuntime", "SimRuntimeResult", "SimGraphResult"]
+__all__ = ["SimRuntime", "SimRuntimeResult", "SimGraphResult",
+           "SimQosResult"]
 
 
 @dataclasses.dataclass
@@ -54,6 +57,18 @@ class SimGraphResult(SimRuntimeResult):
     the usual per-engine accounting."""
 
     node_finish_s: tuple[float, ...] = ()
+
+
+@dataclasses.dataclass
+class SimQosResult(SimRuntimeResult):
+    """A QoS-tagged batch in virtual time: per-submission finish stamps,
+    deadline verdicts, and the seed map (engine name per unit, in
+    submission order) — the conformance surface against the live
+    :meth:`SynergyRuntime._seed_locked`."""
+
+    submission_finish_s: tuple[float, ...] = ()
+    deadline_met: tuple[bool, ...] = ()
+    seed_map: tuple[tuple[str, ...], ...] = ()
 
 
 class SimRuntime:
@@ -141,6 +156,140 @@ class SimRuntime:
             per_engine_jobs=dict(zip(names, jobs_run)),
             per_engine_busy=dict(zip(names, busy)),
             per_engine_steals=dict(zip(names, steals)))
+
+    def run_qos(self, submissions, *, quarantined: Sequence[str] = (),
+                granularity: str = "job") -> SimQosResult:
+        """Execute a batch of QoS-tagged submissions in virtual time — the
+        conformance twin of the live runtime's deadline seeding and
+        quarantine exclusion.
+
+        ``submissions``: sequence of ``(jobset, QosTag-or-None)`` pairs
+        (one batched admission wave, like ``submit_many``).
+        ``quarantined``: engine names currently quarantined — they take no
+        seeds and no steals, and drop out of the best-rate/fastest
+        denominators, exactly as in :meth:`SynergyRuntime._seed_locked`
+        and ``_try_steal_locked`` (the sim models the quarantined steady
+        state; probation probes are a wall-clock concern).
+
+        The decisions are the SHARED pure functions —
+        :func:`~repro.soc.policy.lpt_pick` over deadline-ordered units,
+        :func:`~repro.soc.qos_policy.queue_insert_index` placement,
+        :func:`~repro.soc.qos_policy.qos_victim` +
+        :func:`~repro.soc.policy.should_steal` stealing — so an
+        all-neutral batch reproduces :meth:`run` and the live runtime's
+        trace decision-for-decision."""
+        subs = [(js, tag or NEUTRAL_TAG) for js, tag in submissions]
+        names = [e.name for e in self.engines]
+        quar = [e.name in set(quarantined) for e in self.engines]
+        if all(quar):
+            raise ValueError("run_qos: every engine quarantined")
+        rates = [e.cost.macs_per_s for e in self.engines]
+        best_rate = max(r for r, q in zip(rates, quar) if not q)
+
+        # one unit = (sub_id, unit_seq, priority, deadline_at, n_jobs,
+        #             macs, nbytes); unit_seq keeps the seed order stable
+        units: list[tuple] = []
+        for sid, (js, tag) in enumerate(subs):
+            j = next(js.jobs()) if js.num_jobs else None
+            if j is None:
+                continue
+            if granularity == "job":
+                per = [(1, j.macs, j.bytes_moved)] * js.num_jobs
+            else:
+                gm, gn = js.grid
+                per = [(gn, j.macs, j.bytes_moved)] * gm
+            base = len(units)
+            units.extend((sid, base + u, tag.priority,
+                          tag.deadline_at, *pu) for u, pu in enumerate(per))
+
+        # deadline-aware seed order (the live _seed_order, verbatim logic)
+        neutral = all(u[2] == 0 and u[3] == float("inf") for u in units)
+        if not neutral:
+            units = sorted(
+                units, key=lambda u: (
+                    -u[2],
+                    effective_deadline(u[3], u[4] * u[5] / best_rate),
+                    u[1]))
+
+        # seed: LPT over non-quarantined engines, priority insertion
+        queues: list[list] = [[] for _ in self.engines]
+        loads = [0.0] * len(self.engines)
+        seeded: dict[int, list[str]] = {sid: [] for sid in range(len(subs))}
+        eligible = [i for i in range(len(self.engines)) if not quar[i]]
+        for u in units:
+            sid, _, prio, _, n_jobs, macs, nbytes = u
+            costs = [n_jobs * e.cost.job_time(macs, nbytes)
+                     for e in self.engines]
+            ai = lpt_pick(eligible, loads, costs)
+            loads[ai] += costs[ai]
+            q = queues[ai]
+            if not q or prio <= q[-1][2]:
+                q.append(u)
+            else:
+                q.insert(queue_insert_index([x[2] for x in q], prio), u)
+            seeded[sid].append(names[ai])
+
+        pending = [0] * len(subs)
+        for u in units:
+            pending[u[0]] += 1
+        sub_finish = [0.0] * len(subs)
+
+        fastest = max(r for r, q in zip(rates, quar) if not q)
+        busy = [0.0] * len(self.engines)
+        jobs_run = [0] * len(self.engines)
+        steals = [0] * len(self.engines)
+        free = [True] * len(self.engines)
+
+        events: list = []
+        seq = itertools.count()
+        now = 0.0
+
+        def try_dispatch(i: int) -> None:
+            if not free[i]:
+                return
+            unit = None
+            stolen = False
+            if queues[i]:
+                unit = queues[i].pop(0)
+            elif not quar[i]:
+                cand = [v for v in range(len(queues))
+                        if v != i and queues[v]]
+                if cand:
+                    v = cand[qos_victim([queues[c][-1][2] for c in cand],
+                                        [len(queues[c]) for c in cand])]
+                    if should_steal(rates[i] / fastest, len(queues[v])):
+                        unit = queues[v].pop()     # steal from the tail
+                        stolen = True
+            if unit is None:
+                return
+            sid, _, _, _, n_jobs, macs, nbytes = unit
+            dt = n_jobs * self.engines[i].cost.job_time(macs, nbytes)
+            free[i] = False
+            busy[i] += dt
+            jobs_run[i] += n_jobs
+            steals[i] += int(stolen)
+            heapq.heappush(events, (now + dt, next(seq), i, sid))
+
+        for i in range(len(self.engines)):
+            try_dispatch(i)
+        while events:
+            now, _, i, sid = heapq.heappop(events)
+            free[i] = True
+            pending[sid] -= 1
+            if pending[sid] == 0:
+                sub_finish[sid] = now
+            try_dispatch(i)
+
+        return SimQosResult(
+            makespan_s=now,
+            per_engine_jobs=dict(zip(names, jobs_run)),
+            per_engine_busy=dict(zip(names, busy)),
+            per_engine_steals=dict(zip(names, steals)),
+            submission_finish_s=tuple(sub_finish),
+            deadline_met=tuple(f <= tag.deadline_at
+                               for f, (_, tag) in zip(sub_finish, subs)),
+            seed_map=tuple(tuple(seeded[sid])
+                           for sid in range(len(subs))))
 
     def run_graph(self, jobsets, edges, *, affinity: Optional[str] = None,
                   granularity: str = "job") -> SimGraphResult:
