@@ -31,7 +31,14 @@ _ROW_KEYS = ("net", "pool", "mode", "design", "leg", "shape")
 _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
                "fpga_fps", "het_fps", "tokens_per_s_rel",
                "prefill_overlap_rel", "decode_p99_rel",
-               "slo_attainment_rel", "recovery_fps_rel")
+               "slo_attainment_rel", "recovery_fps_rel",
+               "trace_overhead_rel")
+
+#: ABSOLUTE floors, checked on the NEW run alone (no baseline needed):
+#: a ratio below its floor fails even if the baseline was also below it.
+#: ``trace_overhead_rel`` is the ISSUE 8 observability gate — the span
+#: tracer may cost at most 5% fps on the paced pool when enabled.
+_FLOOR_FIELDS = {"trace_overhead_rel": 0.95}
 
 
 def load_run(path: str) -> dict:
@@ -88,6 +95,17 @@ def compare(baseline: dict, new: dict, max_drop: float) -> list[str]:
             failures.append(
                 f"{'/'.join(key)}: {b:.2f} -> {n:.2f} "
                 f"({drop:.0%} drop > {max_drop:.0%} allowed)")
+    return failures + check_floors(new_m)
+
+
+def check_floors(new_m: dict[tuple, float]) -> list[str]:
+    """Absolute-floor failures in the new run (see ``_FLOOR_FIELDS``)."""
+    failures = []
+    for key in sorted(new_m):
+        floor = _FLOOR_FIELDS.get(key[2])
+        if floor is not None and new_m[key] < floor:
+            failures.append(f"{'/'.join(key)}: {new_m[key]:.3f} below "
+                            f"absolute floor {floor:.2f}")
     return failures
 
 

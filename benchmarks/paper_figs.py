@@ -949,6 +949,89 @@ def qos_slo():
     }
 
 
+def obs_overhead():
+    """ISSUE 8 gate: the span tracer must cost <= 5% on the paced pool.
+
+    The same GEMM-wave workload runs on a 3-engine PACED pool twice per
+    rep — tracer off (the default no-tracer runtime: every emit site is
+    one attribute check) and tracer on (a 1M-event ring recording seed /
+    enqueue / dequeue / panel / steal events for every wave) — and the
+    gated number is the median per-rep fps ratio ``traced / untraced``
+    (``trace_overhead_rel``, floored at 0.95 in check_regression.py).
+    Panels sleep out cost-model time like graph_overlap/qos_slo, so the
+    ratio is machine-stable: the tracer's per-event cost is measured
+    against realistic panel durations, not against a trivially fast
+    in-cache GEMM.  Not shrunk under --smoke for the same reason as the
+    other gated benchmarks."""
+    import statistics
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core.job import JobSet
+    from repro.engines import CAP_GEMM, CostModel, Engine
+    from repro.obs.trace import Tracer, trace_scope
+    from repro.soc import SynergyRuntime
+
+    pace = 4e6
+    waves, reps = 8, 3
+
+    class _PacedEngine(Engine):
+        def __init__(self, name):
+            super().__init__(name, {CAP_GEMM, "epilogue"},
+                             cost=CostModel(macs_per_s=pace))
+
+        def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                    out_dtype=None, precision=None):
+            m, k = a.shape
+            time.sleep(m * k * b.shape[1] / pace)
+            y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+            return y.astype(out_dtype or a.dtype)
+
+    def pool():
+        return [_PacedEngine("obs-a"), _PacedEngine("obs-b"),
+                _PacedEngine("obs-c")]
+
+    def run_wave(rt, step):
+        a = jnp.ones((128, 32)); b = jnp.ones((32, 32))
+        futs = [rt.submit_gemm(
+            a, b, jobset=JobSet.for_gemm(step * 3 + i, 128, 32, 32, 32,
+                                         name=f"ow{step}/{i}"),
+            tile=(32, 32, 32)) for i in range(3)]
+        for f in futs:
+            f.result(240)
+
+    def timed_fps(tracer, base):
+        # trace_scope pins the process-default tracer for the leg: the
+        # off leg must stay untraced (runtime fallback AND the dispatch
+        # emit site read the default) even under `run.py --trace`
+        with trace_scope(tracer), \
+             SynergyRuntime(pool(), name="obs-bench",
+                            tracer=tracer) as rt:
+            run_wave(rt, base + 990)           # warmup: jit compiles
+            t0 = time.perf_counter()
+            for s in range(waves):
+                run_wave(rt, base + s)
+            return waves / (time.perf_counter() - t0)
+
+    ratios, off_fps, on_fps, n_events = [], [], [], 0
+    for rep in range(reps):
+        f_off = timed_fps(None, rep * 1000)
+        tracer = Tracer(capacity=1_000_000)
+        f_on = timed_fps(tracer, rep * 1000 + 500)
+        n_events = len(tracer.events())
+        off_fps.append(f_off)
+        on_fps.append(f_on)
+        ratios.append(f_on / f_off)
+    rel = statistics.median(ratios)
+    rows = [{"mode": "tracer-off", "fps_wall": statistics.median(off_fps)},
+            {"mode": "tracer-on", "fps_wall": statistics.median(on_fps),
+             "trace_overhead_rel": rel, "events_per_leg": n_events}]
+    return rows, {"trace_overhead_rel": round(rel, 4),
+                  "events_per_leg": n_events}
+
+
 ALL = {
     "fig9_throughput": fig9_throughput,
     "fig11_latency_heterogeneity": fig11_latency_heterogeneity,
@@ -964,4 +1047,5 @@ ALL = {
     "serve_throughput": serve_throughput,
     "graph_overlap": graph_overlap,
     "qos_slo": qos_slo,
+    "obs_overhead": obs_overhead,
 }

@@ -36,7 +36,19 @@ def main(argv=None) -> None:
                              "of these comma-separated substrings")
     parser.add_argument("--smoke", action="store_true",
                         help="shrink frame counts (CI smoke mode)")
+    parser.add_argument("--trace", default="", metavar="OUT.json",
+                        help="record every live-runtime benchmark on one "
+                             "tracer and write a Chrome trace_event JSON "
+                             "(open in chrome://tracing or ui.perfetto.dev)")
     args = parser.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        # process-default tracer: benchmarks construct their runtimes
+        # internally, so installing the default is how --trace sees them
+        from repro.obs.trace import Tracer, set_default_tracer
+        tracer = Tracer(capacity=1_000_000)
+        set_default_tracer(tracer)
 
     from benchmarks import paper_figs
     if args.smoke:
@@ -98,6 +110,15 @@ def main(argv=None) -> None:
                                  "busy_fraction": t.busy_fraction}
             print(f"engine_{eng.name},0,jobs={t.jobs};steals={t.steals}")
     full["engine_telemetry"] = engines
+
+    if tracer is not None:
+        n_ev = tracer.export_chrome_trace(args.trace)
+        counts = ";".join(f"{k}={v}" for k, v in
+                          sorted(tracer.counts().items()))
+        full["trace"] = {"path": args.trace, "trace_events": n_ev,
+                         "dropped": tracer.dropped,
+                         "counts": tracer.counts()}
+        print(f"trace,0,path={args.trace};events={n_ev};{counts}")
 
     stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
         "%Y%m%dT%H%M%SZ")

@@ -1,0 +1,68 @@
+"""Trace a 3-engine work-stealing pool and export a Chrome trace.
+
+A burst of GEMMs is submitted with affinity to ONE engine of a
+heterogeneous 3-engine pool, so the other two engines must steal their
+share — every seed, enqueue, dequeue, steal, and panel execution lands
+on one :class:`repro.obs.Tracer`, which is then exported as Chrome
+``trace_event`` JSON.  Open the file in ``chrome://tracing`` or
+https://ui.perfetto.dev to see one timeline track per engine with panel
+spans and steal markers.
+
+    PYTHONPATH=src python examples/trace_steals.py [out.json]
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.core.job import JobSet
+from repro.obs import Tracer, render_prometheus, validate_events
+from repro.soc import SynergyRuntime
+
+
+def main(out_path: str = "results/trace_steals.json") -> None:
+    tracer = Tracer(capacity=100_000)
+    a = jnp.ones((128, 32))
+    b = jnp.ones((32, 32))
+    with SynergyRuntime(["F-PE", "S-PE", "NEON"], name="trace-demo",
+                        tracer=tracer) as rt:
+        # everything seeds onto F-PE; S-PE and NEON must steal to help
+        futs = [rt.submit_gemm(
+            a, b, jobset=JobSet.for_gemm(s, 128, 32, 32, 32,
+                                         name=f"burst{s}"),
+            tile=(32, 32, 32), affinity="F-PE") for s in range(12)]
+        for f in futs:
+            f.result(60)
+        stats = rt.stats()
+        prom = render_prometheus(runtime=rt)
+
+    events = tracer.events()
+    errors = validate_events(events, engines={"F-PE", "S-PE", "NEON"})
+    assert not errors, errors
+
+    counts = tracer.counts()
+    print(f"recorded {len(events)} events: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+    steals = [e for e in events if e.kind == "steal"]
+    for ev in steals[:8]:
+        print(f"  steal @ {ev.ts:.6f}s: {ev.track} <- "
+              f"{ev.tags['victim']} ({ev.tags['jobset']})")
+    if len(steals) > 8:
+        print(f"  ... and {len(steals) - 8} more steals")
+    for name, es in stats["engines"].items():
+        print(f"  {name}: jobs={es['jobs']} steals={es['steals']} "
+              f"busy={es['busy_fraction']:.2f}")
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    n = tracer.export_chrome_trace(out_path)
+    print(f"wrote {n} Chrome trace events -> {out_path}")
+    print("open it in chrome://tracing or https://ui.perfetto.dev")
+    print("\n--- Prometheus exposition (first 12 lines) ---")
+    print("\n".join(prom.splitlines()[:12]))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

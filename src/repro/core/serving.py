@@ -69,6 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engines import CAP_INT8, Dispatcher, Engine, find_engine
+from repro.obs.flightrec import FlightRecorder
+from repro.obs.trace import get_default_tracer
 from repro.soc.qos import AdmissionRejected, Tenant
 from repro.soc.qos_policy import PREFILL_PRIORITY_OFFSET, FairShare, QosTag
 
@@ -357,7 +359,8 @@ class SynergyServer:
                  prefill_chunk_macs: Optional[int] = None,
                  keep_decode_outputs: bool = False,
                  tenants: Optional[Sequence[Tenant]] = None,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None,
+                 tracer=None, flight_recorder=None, metrics=None):
         from repro.models import decode_step, init_cache
         from repro.models.cnn import init_cnn
         if admission not in ("wave", "single"):
@@ -405,6 +408,26 @@ class SynergyServer:
         self.runtime = runtime
         if runtime is not None:
             runtime.start()
+        # observability: share the runtime's tracer/flight recorder so one
+        # tracer covers engine, graph, serving, and admission tracks; with
+        # no tracer anywhere every emit site is one attribute check
+        if tracer is None:
+            tracer = getattr(runtime, "_tracer", None)
+            if tracer is None:
+                tracer = get_default_tracer()
+        self._tracer = tracer
+        if flight_recorder is None:
+            flight_recorder = getattr(runtime, "_flight", None)
+            if flight_recorder is None and tracer is not None:
+                flight_recorder = FlightRecorder(tracer)
+        self._flight = flight_recorder
+        #: optional MetricsRegistry: the ONLY per-observation instrument
+        #: (per-tenant queue-wait histogram) — everything else is view-fed
+        self._metrics = metrics
+        self._qwait_hist = (metrics.histogram(
+            "repro_tenant_queue_wait_seconds",
+            "admission queue wait per tenant", ("tenant",))
+            if metrics is not None else None)
         if prefill_cnn is None:
             from repro.configs.paper_cnns import MNIST
             prefill_cnn = MNIST
@@ -454,9 +477,7 @@ class SynergyServer:
             q = self._queues["default"]
             if (self.max_pending is not None
                     and len(q) >= self.max_pending):
-                self.stats.admission_rejects += 1
-                raise AdmissionRejected("default",
-                                        self._retry_after("default"))
+                raise self._reject("default", req)
             q.append(req)
             return
         if req.tenant not in self.tenants:
@@ -471,10 +492,26 @@ class SynergyServer:
         bound = (t.max_pending if t.max_pending is not None
                  else self.max_pending)
         if bound is not None and len(q) >= bound:
-            self.stats.admission_rejects += 1
             self._tstats(t.name).rejected += 1
-            raise AdmissionRejected(t.name, self._retry_after(t.name))
+            raise self._reject(t.name, req)
         q.append(req)
+
+    def _reject(self, tname: str, req: Request) -> AdmissionRejected:
+        """Book + trace + flight-record one admission rejection and
+        return the exception for the caller to raise."""
+        self.stats.admission_rejects += 1
+        retry = self._retry_after(tname)
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("admission", "admission", outcome="rejected",
+                    tenant=tname, rid=req.rid, retry_after_s=retry)
+        if self._flight is not None:
+            self._flight.dump(
+                "admission_rejected", stats=self.stats,
+                context={"tenant": tname, "rid": req.rid,
+                         "retry_after_s": retry,
+                         "queued": len(self._queues.get(tname, ()))})
+        return AdmissionRejected(tname, retry)
 
     def _retry_after(self, tname: str) -> float:
         """Cost-model estimate of when this tenant's queue frees a spot:
@@ -514,8 +551,14 @@ class SynergyServer:
         if self._shed_level == 0 and occ >= 0.8:
             self._shed_level = 1
             self.stats.shed_engagements += 1
+            tr = self._tracer
+            if tr is not None:
+                tr.emit("shed", "admission", level=1, occupancy=occ)
         elif self._shed_level == 1 and occ < 0.4:
             self._shed_level = 0
+            tr = self._tracer
+            if tr is not None:
+                tr.emit("shed", "admission", level=0, occupancy=occ)
 
     def reset_stats(self) -> None:
         """Fresh counters (benchmark repetitions reuse a warmed server)."""
@@ -632,6 +675,10 @@ class SynergyServer:
                     raise ValueError(f"request {req.rid}: empty prompt")
                 wave.append((req, slot, toks))
             del q[:n]
+            tr = self._tracer
+            if tr is not None:
+                tr.emit("admission", "admission", outcome="admitted",
+                        n=n, rids=[r.rid for r, _, _ in wave])
             self._do_prefill_wave(wave)
             return n
         navail = len(free)
@@ -656,7 +703,14 @@ class SynergyServer:
             wait = max(0.0, now - req.submitted_at)
             ts.queue_wait_s += wait
             ts.max_queue_wait_s = max(ts.max_queue_wait_s, wait)
+            if self._qwait_hist is not None:
+                self._qwait_hist.labels(tname).observe(wait)
         self._update_shed()
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("admission", "admission", outcome="admitted",
+                    n=len(wave), rids=[r.rid for _, r in picked],
+                    tenants=[t for t, _ in picked])
         self._do_prefill_wave(wave)
         return len(wave)
 
@@ -700,10 +754,24 @@ class SynergyServer:
         self.stats.runtime_jobs += sum(a["jobs"] for a in acct.values())
         self.stats.runtime_steals += sum(a["steals"] for a in acct.values())
 
+    def _dump_timeout(self, name: str, rids, tenants) -> None:
+        """Flight-record a serving timeout: event tail + runtime stats so
+        the post-mortem shows WHERE the stuck submission's panels sat."""
+        if self._flight is None:
+            return
+        rt_stats = self.runtime.stats() if self.runtime is not None else {}
+        self._flight.dump(
+            "serve_timeout",
+            stats={"runtime": rt_stats, "serve": self.stats},
+            context={"jobset": name, "rids": list(rids),
+                     "tenants": list(tenants),
+                     "timeout_s": self.submit_timeout})
+
     def _fut_result(self, fut, rids: tuple = (), tenants: tuple = ()):
         try:
             return fut.result(timeout=self.submit_timeout)
         except TimeoutError:
+            self._dump_timeout(fut.jobset.name, rids, tenants)
             raise ServeTimeoutError(fut.jobset.name, self.submit_timeout,
                                     fut.accounting, rids, tenants) from None
 
@@ -715,6 +783,7 @@ class SynergyServer:
             return gf.result(timeout=self.submit_timeout)
         except TimeoutError:
             gf.cancel("serving submit_timeout")
+            self._dump_timeout(gf.name, rids, tenants)
             raise ServeTimeoutError(gf.name, self.submit_timeout,
                                     gf.accounting, rids, tenants) from None
 
@@ -1260,8 +1329,14 @@ class SynergyServer:
                 if (self._qos_enabled and r.tenant in self.tenants
                         and math.isfinite(r.deadline_at)):
                     ts = self._tstats(r.tenant)
-                    if now <= r.deadline_at:
+                    hit = now <= r.deadline_at
+                    if hit:
                         ts.deadline_hits += 1
                     else:
                         ts.deadline_misses += 1
+                    tr = self._tracer
+                    if tr is not None:
+                        tr.emit("deadline_hit" if hit else "deadline_miss",
+                                "serving", rid=r.rid, tenant=r.tenant,
+                                margin_s=r.deadline_at - now)
                 self.slot_req[i] = None   # free the slot (continuous batching)

@@ -151,9 +151,15 @@ class Telemetry:
     @property
     def busy_fraction(self) -> float:
         """Measured busy / (busy + idle) of this engine's runtime worker
-        (the live analog of the simulator's Table-6 utilization)."""
-        denom = self.wall_busy_s + self.idle_s
-        return self.wall_busy_s / denom if denom > 0 else 0.0
+        (the live analog of the simulator's Table-6 utilization).  Reads
+        both fields under the lock: a concurrent ``record_runtime`` /
+        ``merge`` must not tear the ratio (busy from one window, idle
+        from another).  Note the worker books an idle window only AFTER
+        its ``cond.wait`` returns, so a mid-window snapshot UNDERCOUNTS
+        idle — it can never double-count it (regression-tested)."""
+        with self._lock:
+            denom = self.wall_busy_s + self.idle_s
+            return self.wall_busy_s / denom if denom > 0 else 0.0
 
     def merge(self, other: "Telemetry") -> None:
         snap = other.snapshot()

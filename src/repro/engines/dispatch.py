@@ -14,6 +14,8 @@ import dataclasses
 import threading
 from typing import Iterable, Iterator, Optional, Union
 
+from repro.obs import trace as _trace
+
 from .base import CAP_GEMM, CAP_GRAD, CAP_INT8, CAP_SIM, Engine
 from .registry import get_engine, list_engines
 
@@ -143,7 +145,14 @@ class Dispatcher:
             preferred = [e for e in cands if policy.prefer <= e.capabilities]
             if preferred:
                 cands = preferred
-        return min(cands, key=lambda e: e.estimate(jobset))
+        eng = min(cands, key=lambda e: e.estimate(jobset))
+        # one module-attribute check: dispatch decisions show up on traces
+        # (process-default tracer only; tracing off = no-op)
+        if _trace._default is not None:
+            _trace._default.emit(
+                "dispatch", eng.name, jobset=getattr(jobset, "name", None),
+                job_class=job_class, n_candidates=len(cands))
+        return eng
 
 
 _NO_POLICY = JobClassPolicy()

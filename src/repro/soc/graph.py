@@ -204,6 +204,14 @@ class _GraphRun:
         self.cancelled = False
         self.future = GraphFuture(self, name)
 
+    def _emit(self, kind: str, i: int, **tags) -> None:
+        """Trace one node transition on the shared ``graph`` track (the
+        runtime's tracer; one attribute check when tracing is off)."""
+        tr = self.rt._tracer
+        if tr is not None:
+            tr.emit(kind, "graph", graph=self.future.name, node=i,
+                    node_name=self.nodes[i].name, **tags)
+
     # ------------------------------------------------------------- control
     def start(self) -> None:
         rt = self.rt
@@ -227,6 +235,7 @@ class _GraphRun:
                     self.state[i] = "cancelled"
                     self.n_left -= 1
                     n += 1
+                    self._emit("graph_node_cancelled", i, why=why)
             # drain this graph's queued-but-unstarted panels; their
             # submissions then complete with the cancellation error, which
             # funnels back through _node_done for the affected nodes
@@ -243,10 +252,12 @@ class _GraphRun:
         if self.cancelled or self.rt._stopping:
             self.state[i] = "cancelled"
             self.n_left -= 1
+            self._emit("graph_node_cancelled", i, why="graph cancelled")
             if self.n_left == 0:
                 self._finish_locked()
             return
         self.state[i] = "running"
+        self._emit("graph_node_ready", i)
         node = self.nodes[i]
         if node.jobset is not None:
             self._submit_jobset_locked(i, node)
@@ -318,12 +329,15 @@ class _GraphRun:
         self.n_left -= 1
         if error is not None:
             self.state[i] = "failed"
+            self._emit("graph_node_done", i, ok=False,
+                       err=type(error).__name__)
             if self.error is None:
                 self.error = error
             self._cancel_descendants_locked(i)
         else:
             self.values[i] = value
             self.state[i] = "done"
+            self._emit("graph_node_done", i, ok=True)
             if not self.cancelled:
                 for s in self.succs[i]:
                     self.remaining[s] -= 1
@@ -342,6 +356,8 @@ class _GraphRun:
             if self.state[s] == "waiting":
                 self.state[s] = "cancelled"
                 self.n_left -= 1
+                self._emit("graph_node_cancelled", s,
+                           why=f"upstream node {i} failed")
                 stack.extend(self.succs[s])
 
     def _finish_locked(self) -> None:

@@ -125,6 +125,14 @@ class EngineHealth:
         return (self.ema_rate / self.baseline if self.baseline > 0
                 else 1.0)
 
+    def snapshot(self) -> dict:
+        """JSON-safe view for flight-recorder dumps and metrics export."""
+        return {"ema_rate": self.ema_rate, "baseline": self.baseline,
+                "health": self.health, "samples": self.samples,
+                "quarantined": self.quarantined,
+                "quarantines": self.quarantines,
+                "probe_samples": self.probe_samples}
+
     def observe(self, rate: float, policy: HealthPolicy) -> None:
         """Fold one measured per-panel MAC rate into the EMA."""
         self.ema_rate = (rate if self.samples == 0

@@ -45,6 +45,8 @@ import jax
 
 from repro.engines.base import CAP_GEMM, CAP_INT8, CAP_SIM, Engine
 from repro.engines.dispatch import JOB_CLASSES
+from repro.obs.flightrec import FlightRecorder
+from repro.obs.trace import get_default_tracer
 from repro.engines.registry import (add_registry_listener, get_engine,
                                     remove_registry_listener)
 
@@ -268,7 +270,8 @@ class SynergyRuntime:
                  recalibrate_every: Optional[int] = None,
                  recalibrate_alpha: float = 0.5,
                  rates_path: Optional[Union[str, os.PathLike]] = None,
-                 health: Optional[HealthPolicy] = None):
+                 health: Optional[HealthPolicy] = None,
+                 tracer=None, flight_recorder=None):
         """``recalibrate_every=N`` makes the runtime self-calibrating: every
         N completed submissions it folds measured worker rates into the
         cost models (the serving analog of the paper's offline
@@ -286,8 +289,24 @@ class SynergyRuntime:
         rate, no new seeds or steals), probed on a cadence, and
         re-admitted once it measures healthy again (see
         :mod:`repro.soc.qos`).  ``health=None`` (default) disables all
-        of it — zero overhead, zero behavior change."""
+        of it — zero overhead, zero behavior change.
+
+        ``tracer=Tracer(...)`` (see :mod:`repro.obs.trace`) records typed
+        scheduling events — seed/enqueue/dequeue, panel spans, steals,
+        quarantines — exportable as a Chrome trace.  ``tracer=None``
+        falls back to the process default installed by
+        ``repro.obs.trace.set_default_tracer`` (e.g. by
+        ``benchmarks/run.py --trace``); with neither, every
+        instrumentation site is a single ``is None`` attribute check and
+        scheduling is bitwise identical to the untraced runtime.  When a
+        tracer is active, a :class:`~repro.obs.flightrec.FlightRecorder`
+        (auto-created unless ``flight_recorder`` is passed) dumps the
+        event tail + ``stats()`` on every quarantine."""
         self.name = name
+        self._tracer = tracer if tracer is not None else get_default_tracer()
+        if flight_recorder is None and self._tracer is not None:
+            flight_recorder = FlightRecorder(self._tracer)
+        self._flight = flight_recorder
         self.require = frozenset(require)
         self._recal_every = recalibrate_every
         self._recal_alpha = recalibrate_alpha
@@ -543,6 +562,10 @@ class SynergyRuntime:
         at its priority position (:func:`~repro.soc.qos_policy.
         queue_insert_index`) — a decode panel lands ahead of queued bulk
         prefill panels, never mid-panel."""
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("seed", "manager", runtime=self.name,
+                    n_jobs=len(jobs), affinity=affinity)
         workers = list(self._workers.values())
         is_int8 = [CAP_INT8 in w.engine.capabilities for w in workers]
         quar = [w.quarantined for w in workers]
@@ -575,6 +598,10 @@ class SynergyRuntime:
             loads[ai] += (workers[ai].job_time(job.job_macs, job.job_bytes)
                           * job.n_jobs)
             self._enqueue(workers[ai].queue, job)
+            if tr is not None:
+                tr.emit("enqueue", workers[ai].engine.name,
+                        jobset=job.sub.future.jobset.name,
+                        n_jobs=job.n_jobs, priority=job.priority)
 
     def _try_steal_locked(self, thief: _Worker):
         """The stealer: priority-aware victim choice over VIABLE queues,
@@ -613,7 +640,14 @@ class SynergyRuntime:
         if should_steal(rel, len(victim.queue)):
             if probe:
                 h.last_probe_s = time.monotonic()
-            return victim.queue.pop()
+            job = victim.queue.pop()
+            tr = self._tracer
+            if tr is not None:
+                tr.emit("steal", thief.engine.name,
+                        victim=victim.engine.name,
+                        jobset=job.sub.future.jobset.name,
+                        priority=job.priority, probe=probe)
+            return job
         return None
 
     def _worker_loop(self, w: _Worker) -> None:
@@ -623,6 +657,11 @@ class SynergyRuntime:
                 while True:
                     if w.queue:
                         job = w.queue.popleft()
+                        tr = self._tracer
+                        if tr is not None:
+                            tr.emit("dequeue", w.engine.name,
+                                    jobset=job.sub.future.jobset.name,
+                                    n_jobs=job.n_jobs)
                         break
                     if w.stopped:      # retired: never steal NEW work
                         return
@@ -662,6 +701,14 @@ class SynergyRuntime:
         except BaseException as e:
             err = e
         dt = time.perf_counter() - t0
+        tr = self._tracer
+        if tr is not None:
+            tags = {"jobset": job.sub.future.jobset.name,
+                    "n_jobs": job.n_jobs, "stolen": stolen,
+                    "priority": job.priority}
+            if err is not None:
+                tags["err"] = type(err).__name__
+            tr.span("panel", eng.name, t0, dt, **tags)
         est = job.n_jobs * w.job_time(job.job_macs, job.job_bytes)
         w.jobs += job.n_jobs
         w.steals += int(stolen)
@@ -714,6 +761,10 @@ class SynergyRuntime:
         h.enter_quarantine(time.monotonic())
         self._quarantines += 1
         w.engine.telemetry.record_runtime(quarantines=1)
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("quarantine", w.engine.name, runtime=self.name,
+                    health=h.health, ema_rate=h.ema_rate)
         if CAP_SIM not in w.engine.capabilities and h.ema_rate > 0:
             # alpha=1: the decayed measurement IS the engine's rate now
             w.engine.recalibrate(h.ema_rate, alpha=1.0)
@@ -725,6 +776,13 @@ class SynergyRuntime:
             self._seed_locked(stealable, affinity=None)
         self._rebalances += 1
         self._cond.notify_all()
+        if self._flight is not None:
+            # post-mortem without a re-run: event tail + the stats view
+            # AFTER the drain, so the dump shows where the work went
+            self._flight.dump(
+                "quarantine", stats=self.stats(),
+                context={"runtime": self.name, "engine": w.engine.name,
+                         "health": h.snapshot()})
 
     def _readmit_locked(self, w: _Worker) -> None:
         """Probation exit: the probes measured healthy again — restore the
@@ -732,6 +790,10 @@ class SynergyRuntime:
         across the full pool."""
         h = w.health
         h.exit_quarantine()
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("readmit", w.engine.name, runtime=self.name,
+                    health=h.health, ema_rate=h.ema_rate)
         if CAP_SIM not in w.engine.capabilities and h.ema_rate > 0:
             w.engine.recalibrate(h.ema_rate, alpha=1.0)
         self._rebalance_locked()

@@ -72,13 +72,23 @@ class SimQosResult(SimRuntimeResult):
 
 
 class SimRuntime:
-    """Virtual-time work-stealing executor over engine cost models."""
+    """Virtual-time work-stealing executor over engine cost models.
 
-    def __init__(self, engines: Sequence[Union[str, Engine]]):
+    ``tracer=Tracer(...)`` records the SAME event schema the live
+    runtime emits (seed/enqueue/dequeue, panel spans, steals, graph node
+    transitions) with VIRTUAL timestamps, so a sim trace diffs directly
+    against a live trace of the same workload.  Unlike the live runtime
+    the sim never falls back to the process-default tracer — a
+    ``--trace``'d benchmark must not interleave virtual stamps into its
+    wall-clock timeline."""
+
+    def __init__(self, engines: Sequence[Union[str, Engine]], *,
+                 tracer=None):
         self.engines = [get_engine(e) if isinstance(e, str) else e
                         for e in engines]
         if not self.engines:
             raise ValueError("SimRuntime needs at least one engine")
+        self.tracer = tracer
 
     def run(self, jobset, *, affinity: Optional[str] = None,
             granularity: str = "job") -> SimRuntimeResult:
@@ -103,6 +113,14 @@ class SimRuntime:
         home = names.index(affinity) if affinity in names else 0
         queues[home].extend(units)
 
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("seed", "manager", ts=0.0, runtime="sim",
+                    n_jobs=len(units), affinity=affinity)
+            for u in units:
+                tr.emit("enqueue", names[home], ts=0.0,
+                        jobset=jobset.name, n_jobs=u[0], priority=0)
+
         rates = [e.cost.macs_per_s for e in self.engines]
         fastest = max(rates)
         busy = [0.0] * len(self.engines)
@@ -123,6 +141,7 @@ class SimRuntime:
                 return
             unit = None
             stolen = False
+            victim = None
             if queues[i]:
                 unit = queues[i].pop(0)
             else:
@@ -132,6 +151,7 @@ class SimRuntime:
                     if v != i and should_steal(rates[i] / fastest, lens[v]):
                         unit = queues[v].pop()     # steal from the tail
                         stolen = True
+                        victim = names[v]
             if unit is None:
                 return
             dt = unit_time(i, unit)
@@ -139,6 +159,15 @@ class SimRuntime:
             busy[i] += dt
             jobs_run[i] += unit[0]
             steals[i] += int(stolen)
+            if tr is not None:
+                if stolen:
+                    tr.emit("steal", names[i], ts=now, victim=victim,
+                            jobset=jobset.name, priority=0, probe=False)
+                else:
+                    tr.emit("dequeue", names[i], ts=now,
+                            jobset=jobset.name, n_jobs=unit[0])
+                tr.span("panel", names[i], now, dt, jobset=jobset.name,
+                        n_jobs=unit[0], stolen=stolen, priority=0)
             heapq.heappush(events, (now + dt, next(seq), i))
 
         def kick_all() -> None:
@@ -216,6 +245,10 @@ class SimRuntime:
         loads = [0.0] * len(self.engines)
         seeded: dict[int, list[str]] = {sid: [] for sid in range(len(subs))}
         eligible = [i for i in range(len(self.engines)) if not quar[i]]
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("seed", "manager", ts=0.0, runtime="sim",
+                    n_jobs=len(units), affinity=None)
         for u in units:
             sid, _, prio, _, n_jobs, macs, nbytes = u
             costs = [n_jobs * e.cost.job_time(macs, nbytes)
@@ -228,6 +261,10 @@ class SimRuntime:
             else:
                 q.insert(queue_insert_index([x[2] for x in q], prio), u)
             seeded[sid].append(names[ai])
+            if tr is not None:
+                tr.emit("enqueue", names[ai], ts=0.0,
+                        jobset=subs[sid][0].name, n_jobs=n_jobs,
+                        priority=prio)
 
         pending = [0] * len(subs)
         for u in units:
@@ -249,6 +286,7 @@ class SimRuntime:
                 return
             unit = None
             stolen = False
+            victim = None
             if queues[i]:
                 unit = queues[i].pop(0)
             elif not quar[i]:
@@ -260,14 +298,25 @@ class SimRuntime:
                     if should_steal(rates[i] / fastest, len(queues[v])):
                         unit = queues[v].pop()     # steal from the tail
                         stolen = True
+                        victim = names[v]
             if unit is None:
                 return
-            sid, _, _, _, n_jobs, macs, nbytes = unit
+            sid, _, prio, _, n_jobs, macs, nbytes = unit
             dt = n_jobs * self.engines[i].cost.job_time(macs, nbytes)
             free[i] = False
             busy[i] += dt
             jobs_run[i] += n_jobs
             steals[i] += int(stolen)
+            if tr is not None:
+                jname = subs[sid][0].name
+                if stolen:
+                    tr.emit("steal", names[i], ts=now, victim=victim,
+                            jobset=jname, priority=prio, probe=False)
+                else:
+                    tr.emit("dequeue", names[i], ts=now, jobset=jname,
+                            n_jobs=n_jobs)
+                tr.span("panel", names[i], now, dt, jobset=jname,
+                        n_jobs=n_jobs, stolen=stolen, priority=prio)
             heapq.heappush(events, (now + dt, next(seq), i, sid))
 
         for i in range(len(self.engines)):
@@ -336,18 +385,33 @@ class SimRuntime:
         seq = itertools.count()
         now = 0.0
 
+        tr = self.tracer
+
         def release(ready: list[int]) -> None:
             """Enqueue newly ready nodes at virtual time ``now``; empty
             nodes complete instantly and cascade."""
             while ready:
                 nid = ready.pop(0)
+                if tr is not None:
+                    tr.emit("graph_node_ready", "graph", ts=now,
+                            graph="sim-graph", node=nid,
+                            node_name=jobsets[nid].name)
                 if pending[nid] == 0:        # no units: done on release
                     node_finish[nid] = now
+                    if tr is not None:
+                        tr.emit("graph_node_done", "graph", ts=now,
+                                graph="sim-graph", node=nid,
+                                node_name=jobsets[nid].name, ok=True)
                     for s in succs[nid]:
                         remaining[s] -= 1
                         if remaining[s] == 0:
                             ready.append(s)
                     continue
+                if tr is not None:
+                    for u in units[nid]:
+                        tr.emit("enqueue", names[home], ts=now,
+                                jobset=jobsets[nid].name, n_jobs=u[0],
+                                priority=0)
                 queues[home].extend((nid,) + u for u in units[nid])
 
         def try_dispatch(i: int) -> None:
@@ -355,6 +419,7 @@ class SimRuntime:
                 return
             unit = None
             stolen = False
+            victim = None
             if queues[i]:
                 unit = queues[i].pop(0)
             else:
@@ -364,15 +429,26 @@ class SimRuntime:
                     if v != i and should_steal(rates[i] / fastest, lens[v]):
                         unit = queues[v].pop()     # steal from the tail
                         stolen = True
+                        victim = names[v]
             if unit is None:
                 return
-            _, n_jobs, macs, nbytes = unit
+            nid, n_jobs, macs, nbytes = unit
             dt = n_jobs * self.engines[i].cost.job_time(macs, nbytes)
             free[i] = False
             busy[i] += dt
             jobs_run[i] += n_jobs
             steals[i] += int(stolen)
-            heapq.heappush(events, (now + dt, next(seq), i, unit[0]))
+            if tr is not None:
+                jname = jobsets[nid].name
+                if stolen:
+                    tr.emit("steal", names[i], ts=now, victim=victim,
+                            jobset=jname, priority=0, probe=False)
+                else:
+                    tr.emit("dequeue", names[i], ts=now, jobset=jname,
+                            n_jobs=n_jobs)
+                tr.span("panel", names[i], now, dt, jobset=jname,
+                        n_jobs=n_jobs, stolen=stolen, priority=0)
+            heapq.heappush(events, (now + dt, next(seq), i, nid))
 
         def kick_all() -> None:
             for i in range(len(self.engines)):
@@ -386,6 +462,10 @@ class SimRuntime:
             pending[nid] -= 1
             if pending[nid] == 0:
                 node_finish[nid] = now
+                if tr is not None:
+                    tr.emit("graph_node_done", "graph", ts=now,
+                            graph="sim-graph", node=nid,
+                            node_name=jobsets[nid].name, ok=True)
                 ready = []
                 for s in succs[nid]:
                     remaining[s] -= 1
