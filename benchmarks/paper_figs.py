@@ -1032,6 +1032,102 @@ def obs_overhead():
                   "events_per_leg": n_events}
 
 
+def fault_recovery():
+    """ISSUE 9 gate: a pool that loses an engine mid-run must keep at
+    least 0.8x its clean throughput once recovery settles.
+
+    A 3-engine PACED pool (two at ``fast``, one at ``fast/4`` — combined
+    capacity 9 units) runs the GEMM-wave workload twice: a clean leg
+    (full pool, no faults) and a fault leg where a deterministic
+    FaultPlan KILLS the slow engine's worker mid-panel.  The heartbeat
+    monitor declares the worker dead, its queued + in-flight panels
+    re-seed onto the two survivors (capacity 8 units), and the timed
+    window measures the recovered pool: ``fault_recovery_rel`` =
+    recovered / clean fps, ideally ~8/9 = 0.89, floored at 0.8 in
+    check_regression.py.  The detection phase (death through re-seed) is
+    untimed, mirroring qos_slo's quarantine leg — the gate protects the
+    steady recovered state, not the one wave that ate the heartbeat
+    timeout.  Not shrunk under --smoke like the other gated benchmarks."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core.job import JobSet
+    from repro.engines import CAP_GEMM, CostModel, Engine
+    from repro.soc import (FaultPlan, FaultSpec, RetryPolicy,
+                           SynergyRuntime, wrap_pool)
+
+    fast, waves = 4e6, 16
+
+    class _PacedEngine(Engine):
+        def __init__(self, name, macs_per_s):
+            super().__init__(name, {CAP_GEMM, "epilogue"},
+                             cost=CostModel(macs_per_s=macs_per_s))
+            self._macs_per_s = macs_per_s
+
+        def execute(self, a, b, *, bias=None, activation=None, tile=None,
+                    out_dtype=None, precision=None):
+            m, k = a.shape
+            time.sleep(m * k * b.shape[1] / self._macs_per_s)
+            y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+            return y.astype(out_dtype or a.dtype)
+
+    def pool():
+        return [_PacedEngine("fr-a", fast), _PacedEngine("fr-b", fast),
+                _PacedEngine("fr-c", fast / 4)]
+
+    def run_wave(rt, step):
+        a = jnp.ones((128, 32)); b = jnp.ones((32, 32))
+        futs = [rt.submit_gemm(
+            a, b, jobset=JobSet.for_gemm(step * 3 + i, 128, 32, 32, 32,
+                                         name=f"frw{step}/{i}"),
+            tile=(32, 32, 32)) for i in range(3)]
+        for f in futs:
+            f.result(240)
+
+    def timed_waves(rt, base, n=waves):
+        t0 = time.perf_counter()
+        for s in range(n):
+            run_wave(rt, base + s)
+        return n / (time.perf_counter() - t0)
+
+    retry = RetryPolicy(max_attempts=4, heartbeat_timeout_s=0.1,
+                        monitor_interval_s=0.02)
+    with SynergyRuntime(pool(), name="fr-clean") as rt:
+        run_wave(rt, 990)                      # warmup: jit compiles
+        clean_fps = timed_waves(rt, 0)
+    plan = FaultPlan((FaultSpec("fr-c", "die", at_call=2),), seed=9)
+    with SynergyRuntime(wrap_pool(pool(), plan), name="fr-fault",
+                        retry=retry) as rt:
+        deadline = time.perf_counter() + 60    # detection phase, untimed
+        while (rt.stats()["worker_deaths"] < 1
+               and time.perf_counter() < deadline):
+            run_wave(rt, 100 + rt.stats()["submissions"])
+        st = rt.stats()
+        recovered_fps = timed_waves(rt, 300)
+        st_final = rt.stats()
+    rel = recovered_fps / clean_fps
+    rows = [
+        {"mode": "clean-pool", "fps_wall": clean_fps,
+         "fault_recovery_rel": 1.0},
+        {"mode": "recovered-pool", "fps_wall": recovered_fps,
+         "fault_recovery_rel": rel,
+         "worker_deaths": st_final["worker_deaths"],
+         "orphan_reseeds": st_final["orphan_reseeds"],
+         "retries": st_final["retries"]},
+    ]
+    return rows, {
+        "fault_recovery_rel": round(rel, 4),
+        "meets_0_8x": rel >= 0.8,
+        "worker_deaths": st_final["worker_deaths"],
+        "orphan_reseeds": st_final["orphan_reseeds"],
+        "retries": st_final["retries"],
+        "waves_to_detect": st["submissions"] // 3,
+        "injected": list(map(list, plan.injected)),
+    }
+
+
 ALL = {
     "fig9_throughput": fig9_throughput,
     "fig11_latency_heterogeneity": fig11_latency_heterogeneity,
@@ -1048,4 +1144,5 @@ ALL = {
     "graph_overlap": graph_overlap,
     "qos_slo": qos_slo,
     "obs_overhead": obs_overhead,
+    "fault_recovery": fault_recovery,
 }

@@ -239,6 +239,10 @@ class ServeStats:
     #: runtime mode only: tile jobs executed / stolen across the pool
     runtime_jobs: int = 0
     runtime_steals: int = 0
+    #: runtime mode only: panel re-executions absorbed by the pool's
+    #: RetryPolicy (injected faults, worker deaths) — the serving-visible
+    #: proof that a crash mid-wave cost retries, not requests
+    runtime_retries: int = 0
     #: tenant name -> :class:`TenantStats` (tenanted servers only)
     tenants: dict = dataclasses.field(default_factory=dict)
     #: requests refused admission (queue bound hit after the shed ladder)
@@ -739,8 +743,13 @@ class SynergyServer:
         self.stats.precision_jobs[self._precision_class(eng)] += js.num_jobs
         return eng
 
-    def _book_runtime(self, kind: str, acct: dict) -> None:
-        """Book one reaped runtime submission's per-engine accounting."""
+    def _book_runtime(self, kind: str, acct: dict, src=None) -> None:
+        """Book one reaped runtime submission's per-engine accounting.
+        ``src`` is the reaped future/graph itself, when available — its
+        ``retries`` count (panels re-executed by the pool's RetryPolicy)
+        rolls into ``stats.runtime_retries``."""
+        if src is not None:
+            self.stats.runtime_retries += getattr(src, "retries", 0)
         self.stats.job_busy_s[kind] += sum(a["est_s"] for a in acct.values())
         if acct:
             dominant = max(acct, key=lambda n: acct[n]["jobs"])
@@ -843,11 +852,11 @@ class SynergyServer:
         inf = self._inflight.popleft()
         if inf.graph is not None:
             self._graph_result(inf.graph, inf.rids, inf.tenant_names)
-            self._book_runtime(inf.kind, inf.graph.accounting)
+            self._book_runtime(inf.kind, inf.graph.accounting, inf.graph)
         results = [self._fut_result(f, inf.rids, inf.tenant_names)
                    for f in inf.futures]
         for fut in inf.futures:
-            self._book_runtime(inf.kind, fut.accounting)
+            self._book_runtime(inf.kind, fut.accounting, fut)
         if inf.kind == "decode" and inf.layout is not None:
             live, nl = inf.layout
             n_cols = inf.cal_key[1]
@@ -1028,7 +1037,7 @@ class SynergyServer:
             if not conv.fut.done():
                 return False
             vals = conv.fut.result(0)
-            self._book_runtime("prefill", conv.fut.accounting)
+            self._book_runtime("prefill", conv.fut.accounting, conv.fut)
             conv.x = vals[-1]
             conv.fut = None
         if conv.chunks:
@@ -1040,7 +1049,7 @@ class SynergyServer:
         if conv.fut is not None:
             vals = self._graph_result(conv.fut, conv.rids,
                                       conv.tenant_names)
-            self._book_runtime("prefill", conv.fut.accounting)
+            self._book_runtime("prefill", conv.fut.accounting, conv.fut)
             conv.x = vals[-1]
             conv.fut = None
         if conv.chunks:

@@ -1,9 +1,13 @@
 """Flight recorder: post-mortem dumps without a re-run.
 
 On a serving timeout (``ServeTimeoutError``), an admission rejection
-(``AdmissionRejected``), or a self-healing quarantine, the recorder
-snapshots the tracer's last ``last_n`` events plus whatever ``stats()``
-views the caller hands it into a timestamped JSON file under
+(``AdmissionRejected``), a self-healing quarantine, a panel exhausting
+its :class:`~repro.soc.faults.RetryPolicy` (reason ``retry_exhausted``:
+the failed panel's jobset, attempt history and the engines it failed
+on), or a worker declared dead by the heartbeat monitor (reason
+``worker_death``: the dead engine plus its orphaned panel counts), the
+recorder snapshots the tracer's last ``last_n`` events plus whatever
+``stats()`` views the caller hands it into a timestamped JSON file under
 ``results/flightrec-*.json``.  Dumps are best-effort (a full disk must
 never take down serving) and rate-capped (``max_dumps``) so a
 quarantine storm can't fill the results directory.

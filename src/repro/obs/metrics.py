@@ -301,6 +301,15 @@ def collect_runtime(rt, registry: MetricsRegistry = REGISTRY) -> None:
     registry.counter("repro_runtime_quarantines_total",
                      "self-healing quarantine trips").set_total(
         st["quarantines"])
+    registry.counter("repro_runtime_retries_total",
+                     "panel re-executions under the RetryPolicy").set_total(
+        st.get("retries", 0))
+    registry.counter("repro_runtime_worker_deaths_total",
+                     "engine workers declared dead by the heartbeat "
+                     "monitor").set_total(st.get("worker_deaths", 0))
+    registry.counter("repro_runtime_orphan_reseeds_total",
+                     "orphaned panels re-seeded after a worker "
+                     "death").set_total(st.get("orphan_reseeds", 0))
 
 
 def collect_server(srv, registry: MetricsRegistry = REGISTRY) -> None:

@@ -35,10 +35,13 @@ EVENT_KINDS = frozenset({
     "panel_start", "panel_end",          # one engine executing one panel
     "steal", "seed", "enqueue", "dequeue",
     "graph_node_ready", "graph_node_done", "graph_node_cancelled",
+    "graph_node_retry",
     "admission", "shed",
     "quarantine", "readmit",
     "deadline_hit", "deadline_miss",
     "dispatch",
+    "fault_injected", "panel_retry",     # fault-injection + recovery layer
+    "worker_death", "orphan_reseed",
 })
 
 #: kinds exported as paired "X" complete events (the rest are instants)

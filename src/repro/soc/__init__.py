@@ -14,6 +14,10 @@ so simulated and live steal decisions agree for identical cost models.
     print(rt.stats()["total_steals"])
 """
 
+from .faults import (FAULT_KINDS, CorruptOutput, DroppedCompletion,
+                     FaultPlan, FaultSpec, FaultyEngine, InjectedFault,
+                     PanelRetryExhausted, RetryPolicy, WorkerKilled,
+                     wrap_pool)
 from .graph import GraphCancelled, GraphFuture, GraphNode
 from .policy import (STEAL_QUEUE_DEPTH, STEAL_RATE_FLOOR, lpt_pick,
                      pick_victim, should_steal)
@@ -36,4 +40,7 @@ __all__ = [
     "BULK", "BEST_EFFORT", "FairShare", "effective_deadline",
     "qos_victim", "queue_insert_index",
     "Tenant", "AdmissionRejected", "HealthPolicy", "EngineHealth",
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "FaultyEngine", "RetryPolicy",
+    "InjectedFault", "CorruptOutput", "WorkerKilled", "DroppedCompletion",
+    "PanelRetryExhausted", "wrap_pool",
 ]

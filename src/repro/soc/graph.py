@@ -160,6 +160,15 @@ class GraphFuture:
                     m[key] += a.get(key, 0)
         return merged
 
+    @property
+    def retries(self) -> int:
+        """Recovery work this graph consumed: node-level relaunches plus
+        every node submission's panel-level retries."""
+        with self._run.rt._lock:
+            futs = [f for f in self._run.node_futs if f is not None]
+            n = sum(self._run.node_attempts)
+        return n + sum(getattr(f, "retries", 0) for f in futs)
+
     # internal -------------------------------------------------------------
     def _finish(self, value: Any, error: Optional[BaseException]) -> None:
         self._value, self._error = value, error
@@ -175,7 +184,8 @@ class _GraphRun:
     executor threads; both funnel through :meth:`_node_done`."""
 
     def __init__(self, rt, nodes, edges, *, affinity: Optional[str],
-                 granularity: str, name: str, qos=None):
+                 granularity: str, name: str, qos=None,
+                 node_retries: int = 0):
         norm: list[GraphNode] = []
         for node in nodes:
             if isinstance(node, GraphNode):
@@ -199,6 +209,12 @@ class _GraphRun:
         self.values: list[Any] = [None] * n
         self.state = ["waiting"] * n   # running | done | failed | cancelled
         self.node_futs: list = [None] * n
+        #: whole-node retry budget: a failed node relaunches (fresh
+        #: submission) up to ``node_retries`` times BEFORE its descendants
+        #: are cancelled — the graph-level second line of defense behind
+        #: the runtime's panel-level RetryPolicy
+        self.max_node_retries = node_retries
+        self.node_attempts = [0] * n
         self.n_left = n
         self.error: Optional[BaseException] = None
         self.cancelled = False
@@ -324,6 +340,22 @@ class _GraphRun:
     def _node_done_locked(self, i: int, value: Any,
                           error: Optional[BaseException]) -> None:
         if self.state[i] not in ("waiting", "running"):
+            return
+        if (error is not None and isinstance(error, Exception)
+                and not isinstance(error, GraphCancelled)
+                and not self.cancelled and not self.rt._stopping
+                and self.node_attempts[i] < self.max_node_retries):
+            # node retry BEFORE descendant-cancel: relaunch the whole node
+            # as a fresh submission; descendants only die once the budget
+            # is spent.  The node never entered finish_order / n_left, so
+            # the graph's completion accounting is untouched.
+            self.node_attempts[i] += 1
+            self._emit("graph_node_retry", i,
+                       attempt=self.node_attempts[i],
+                       err=type(error).__name__)
+            self.state[i] = "waiting"
+            self.node_futs[i] = None
+            self._launch_locked(i)
             return
         self.future.finish_order.append(i)
         self.n_left -= 1

@@ -108,7 +108,7 @@ class EngineHealth:
 
     __slots__ = ("ema_rate", "baseline", "samples", "quarantined",
                  "quarantined_at", "last_probe_s", "probe_samples",
-                 "quarantines")
+                 "quarantines", "faults")
 
     def __init__(self) -> None:
         self.ema_rate = 0.0
@@ -119,6 +119,7 @@ class EngineHealth:
         self.last_probe_s = 0.0
         self.probe_samples = 0
         self.quarantines = 0
+        self.faults = 0
 
     @property
     def health(self) -> float:
@@ -131,7 +132,8 @@ class EngineHealth:
                 "health": self.health, "samples": self.samples,
                 "quarantined": self.quarantined,
                 "quarantines": self.quarantines,
-                "probe_samples": self.probe_samples}
+                "probe_samples": self.probe_samples,
+                "faults": self.faults}
 
     def observe(self, rate: float, policy: HealthPolicy) -> None:
         """Fold one measured per-panel MAC rate into the EMA."""
@@ -144,9 +146,25 @@ class EngineHealth:
         else:
             self.baseline = max(self.baseline, self.ema_rate)
 
+    def record_fault(self, policy: HealthPolicy) -> None:
+        """Fold one FAULT (raised panel, corrupted output) into the record:
+        count it, and drive the EMA toward zero — a fault is a panel that
+        produced no useful work, i.e. a measured rate of 0.  Repeated
+        faults therefore push the engine through the SAME quarantine
+        threshold a thermal collapse would (one machinery, not two)."""
+        self.faults += 1
+        self.observe(0.0, policy)
+
     def should_quarantine(self, policy: HealthPolicy) -> bool:
-        return (not self.quarantined
-                and self.samples >= policy.min_samples
+        if self.quarantined:
+            return False
+        if (self.baseline == 0 and self.samples >= policy.min_samples
+                and self.faults >= policy.min_samples):
+            # never produced a single healthy panel — only faults.  The
+            # relative-to-baseline test can't condemn it (there IS no
+            # baseline), but min_samples straight faults can.
+            return True
+        return (self.samples >= policy.min_samples
                 and self.baseline > 0
                 and self.ema_rate < policy.quarantine_below * self.baseline)
 

@@ -49,18 +49,31 @@ from repro.obs.flightrec import FlightRecorder
 from repro.obs.trace import get_default_tracer
 from repro.engines.registry import (add_registry_listener, get_engine,
                                     remove_registry_listener)
-
+from .faults import (CorruptOutput, DroppedCompletion, PanelRetryExhausted,
+                     RetryPolicy, WorkerKilled)
 from .policy import lpt_pick, should_steal
 from .qos import EngineHealth, HealthPolicy
 from .qos_policy import (NEUTRAL_TAG, QosTag, effective_deadline,
                          qos_victim, queue_insert_index)
 
-__all__ = ["SynergyRuntime", "RuntimeFuture", "runtime_scope",
-           "current_runtime"]
+__all__ = ["SynergyRuntime", "RuntimeFuture", "RetryPolicy",
+           "runtime_scope", "current_runtime"]
 
 #: idle-book wait quantum.  Wakeups are notify-driven (submit / pool change
 #: / shutdown all notify_all); the timeout is only a lost-wakeup backstop.
 _IDLE_WAIT_S = 0.5
+
+
+def __getattr__(name):
+    # The worker-death detector REUSES the elastic-training heartbeat (one
+    # timeout definition, not two — see RetryPolicy.timeout_steps).  The
+    # import must be lazy: repro.runtime's package init reaches back into
+    # repro.core.scheduler, which imports repro.soc.policy, and a top-level
+    # import here would close that cycle.
+    if name == "HeartbeatMonitor":
+        from repro.runtime.fault_tolerance import HeartbeatMonitor
+        return HeartbeatMonitor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _admits_int8(job_class: Optional[str]) -> bool:
@@ -95,6 +108,8 @@ class RuntimeFuture:
         #: engine name -> {"jobs", "est_s", "bytes", "steals"} for the share
         #: of this submission each engine actually executed.
         self.accounting: dict[str, dict] = {}
+        #: panel retries this submission consumed (RetryPolicy runs only)
+        self.retries = 0
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -150,7 +165,8 @@ class _RuntimeJob:
     pre-QoS runtime did."""
 
     __slots__ = ("sub", "index", "fn", "n_jobs", "job_macs", "job_bytes",
-                 "stealable", "int8_ok", "priority", "deadline_at")
+                 "stealable", "int8_ok", "priority", "deadline_at",
+                 "attempts", "failed_on")
 
     def __init__(self, sub: "_Submission", index: int, fn, n_jobs: int,
                  job_macs: int, job_bytes: int, stealable: bool = True,
@@ -166,6 +182,11 @@ class _RuntimeJob:
         self.int8_ok = int8_ok
         self.priority = priority
         self.deadline_at = deadline_at
+        # retry bookkeeping (RetryPolicy runs only): executions consumed,
+        # and engines this panel already failed on (None until the first
+        # failure — the fault-free hot path never allocates the list)
+        self.attempts = 0
+        self.failed_on: Optional[list[str]] = None
 
 
 class _Submission:
@@ -179,6 +200,12 @@ class _Submission:
         self.exec_counts = [0] * n_parts   # work-conservation audit trail
         self.future.execution_counts = self.exec_counts
         self.pending = n_parts
+        #: idempotent-completion flags: a DUPLICATE completion for an
+        #: already-done index (stall-sweep re-execution racing the slow
+        #: original) is dropped whole — parts, accounting and the pending
+        #: countdown see exactly one completion per index, so duplicate
+        #: re-execution is always merge-safe
+        self.done_flags = [False] * n_parts
         self.error: Optional[BaseException] = None
         self.lock = threading.Lock()
 
@@ -186,6 +213,9 @@ class _Submission:
                  err: Optional[BaseException], est_s: float,
                  stolen: bool) -> None:
         with self.lock:
+            if self.done_flags[job.index]:
+                return                     # first completion won the race
+            self.done_flags[job.index] = True
             self.parts[job.index] = part
             self.exec_counts[job.index] += 1
             acct = self.future.accounting.setdefault(
@@ -271,6 +301,7 @@ class SynergyRuntime:
                  recalibrate_alpha: float = 0.5,
                  rates_path: Optional[Union[str, os.PathLike]] = None,
                  health: Optional[HealthPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
                  tracer=None, flight_recorder=None):
         """``recalibrate_every=N`` makes the runtime self-calibrating: every
         N completed submissions it folds measured worker rates into the
@@ -290,6 +321,24 @@ class SynergyRuntime:
         re-admitted once it measures healthy again (see
         :mod:`repro.soc.qos`).  ``health=None`` (default) disables all
         of it — zero overhead, zero behavior change.
+
+        ``retry=RetryPolicy(...)`` (see :mod:`repro.soc.faults`) makes
+        the pool FAULT-TOLERANT: a panel that raises (or fails the
+        opt-in NaN/Inf output screen) is re-seeded onto a surviving
+        engine instead of failing its submission — up to
+        ``max_attempts`` executions, avoiding engines it already failed
+        on — a worker thread that DIES is detected by a heartbeat
+        monitor (the :class:`repro.runtime.fault_tolerance.
+        HeartbeatMonitor` semantics, ticked by a runtime monitor
+        thread) and its queued + in-flight panels re-seed onto the
+        survivors, and a panel in flight longer than
+        ``stall_timeout_s`` gets a duplicate attempt (first completion
+        wins — the merge is idempotent per panel index).  Every fault
+        feeds the worker's health EMA when a ``HealthPolicy`` is also
+        active, so chronically flaky engines quarantine through the
+        same machinery as slow ones.  ``retry=None`` (default) keeps
+        the first-error-wins behavior, zero overhead: no monitor
+        thread, no in-flight registry.
 
         ``tracer=Tracer(...)`` (see :mod:`repro.obs.trace`) records typed
         scheduling events — seed/enqueue/dequeue, panel spans, steals,
@@ -311,6 +360,15 @@ class SynergyRuntime:
         self._recal_every = recalibrate_every
         self._recal_alpha = recalibrate_alpha
         self._health = health
+        self._retry = retry
+        self._retries = 0
+        self._worker_deaths = 0
+        self._orphan_reseeds = 0
+        #: panels currently executing, job -> (engine_name, t_start) —
+        #: maintained ONLY under a RetryPolicy (the monitor's view of
+        #: what a dead worker orphans / what the stall sweep re-seeds)
+        self._live_panels: dict[_RuntimeJob, tuple[str, float]] = {}
+        self._monitor: Optional[threading.Thread] = None
         self._quarantines = 0
         self._rates_path = os.fspath(rates_path) if rates_path else None
         self._completed = 0    # finished submissions (cadence counter)
@@ -366,6 +424,11 @@ class SynergyRuntime:
             self._stopping = False
             for w in self._workers.values():
                 self._spawn(w)
+            if self._retry is not None and self._monitor is None:
+                self._monitor = threading.Thread(
+                    target=self._monitor_loop, daemon=True,
+                    name=f"synergy-{self.name}-monitor")
+                self._monitor.start()
         if self._follow_registry and self._listener is None:
             self._listener = add_registry_listener(self._on_registry_event)
         return self
@@ -399,6 +462,8 @@ class SynergyRuntime:
             t.join(timeout)
         with self._cond:
             self._started = False
+            self._monitor = None       # stale monitor loops see the swap
+            self._live_panels.clear()
             self._retired.clear()
             pool, self._host_pool = self._host_pool, None
         if pool is not None:
@@ -573,14 +638,23 @@ class SynergyRuntime:
                      for j in w.queue) for w in workers]
         best_rate = max((w.rate for w, q in zip(workers, quar) if not q),
                         default=0.0)
+        avoid_on = (self._retry is not None
+                    and self._retry.avoid_failed_engine)
         for job in self._seed_order(jobs, best_rate):
-            idxs = [i for i in range(len(workers))
-                    if (job.int8_ok or not is_int8[i]) and not quar[i]]
+            elig = [i for i in range(len(workers))
+                    if job.int8_ok or not is_int8[i]]
+            idxs = [i for i in elig if not quar[i]]
+            if avoid_on and job.failed_on:
+                # retry placement: skip the engines this panel already
+                # failed on — unless that leaves nowhere to go
+                avoided = [i for i in idxs
+                           if workers[i].engine.name not in job.failed_on]
+                if avoided:
+                    idxs = avoided
             if not idxs:
                 # every eligible engine quarantined: degraded placement
                 # beats failing the submission
-                idxs = [i for i in range(len(workers))
-                        if job.int8_ok or not is_int8[i]]
+                idxs = elig
             if not idxs:
                 job.sub.complete(
                     job, "<unplaceable>", None,
@@ -625,10 +699,17 @@ class SynergyRuntime:
                 return None
             probe = True
         thief_int8 = CAP_INT8 in thief.engine.capabilities
+        # avoid_failed_engine must hold at STEAL time too: an engine whose
+        # panels fault instantly is always hungry and would steal its own
+        # failed retry straight back off the survivor it re-seeded to
+        avoid = (self._retry is not None
+                 and self._retry.avoid_failed_engine)
         names = [n for n, w in self._workers.items()
                  if n != thief.engine.name and w.queue
                  and w.queue[-1].stealable
-                 and (w.queue[-1].int8_ok or not thief_int8)]
+                 and (w.queue[-1].int8_ok or not thief_int8)
+                 and not (avoid and w.queue[-1].failed_on
+                          and thief.engine.name in w.queue[-1].failed_on)]
         if not names:
             return None
         prios = [self._workers[n].queue[-1].priority for n in names]
@@ -684,13 +765,23 @@ class SynergyRuntime:
                         w.idle_s += dt
                         w.engine.telemetry.record_runtime(idle_s=dt)
                 w.idle = False
-            self._execute(w, job, stolen)
+            try:
+                self._execute(w, job, stolen)
+            except WorkerKilled:
+                # injected mid-panel death: the thread exits without
+                # completing its panel (the live-panel registry entry
+                # survives for the heartbeat monitor to orphan-reseed)
+                return
             if w.stopped:
                 return
 
     def _execute(self, w: _Worker, job: _RuntimeJob, stolen: bool) -> None:
         eng = w.engine
         err, part = None, None
+        retry = self._retry
+        if retry is not None:
+            with self._lock:
+                self._live_panels[job] = (eng.name, time.monotonic())
         t0 = time.perf_counter()
         try:
             if job.fn is not None:
@@ -698,6 +789,16 @@ class SynergyRuntime:
                 # in ~µs and would make the measured (recalibration) rate
                 # orders of magnitude too high on real backends
                 part = jax.block_until_ready(job.fn(eng))
+        except WorkerKilled:
+            # mid-panel worker death: re-raise WITHOUT completing and
+            # WITHOUT clearing the live-panel entry — the monitor reads
+            # it to know what the corpse was holding
+            raise
+        except DroppedCompletion:
+            # the panel computed but its completion was lost: the worker
+            # moves on; only the stall sweep (which still sees the live
+            # entry) can recover the submission
+            return
         except BaseException as e:
             err = e
         dt = time.perf_counter() - t0
@@ -728,6 +829,19 @@ class SynergyRuntime:
             # self-healing: only REAL compute measures a health rate, for
             # the same reason recalibration ignores accounting-only jobs
             self._health_tick(w, job.n_jobs * job.job_macs / dt)
+        if retry is not None:
+            with self._lock:
+                self._live_panels.pop(job, None)
+            if err is None and retry.check_outputs \
+                    and self._screen_output(part):
+                err = CorruptOutput(
+                    f"panel of {job.sub.future.jobset.name!r} returned "
+                    f"non-finite values on {eng.name!r}")
+            if err is not None:
+                err = self._maybe_retry(w, job, err)
+                if err is None:
+                    return             # re-seeded: another attempt runs
+                part = None
         job.sub.complete(job, eng.name, part, err, est, stolen)
 
     # ------------------------------------------------------- self-healing
@@ -798,6 +912,200 @@ class SynergyRuntime:
             w.engine.recalibrate(h.ema_rate, alpha=1.0)
         self._rebalance_locked()
         self._cond.notify_all()
+
+    # ------------------------------------------------------ fault recovery
+    def _monitor_loop(self) -> None:
+        """The RetryPolicy's watchdog thread: one HeartbeatMonitor "step"
+        per ``monitor_interval_s`` tick.  Each tick beats every worker
+        whose thread is still alive; a worker silent for
+        ``timeout_steps`` ticks (``heartbeat_timeout_s``) is declared
+        dead and its queued + in-flight panels re-seed onto survivors.
+        The monitor is rebuilt (everyone re-beaten at the current tick)
+        whenever pool membership changes, so a hotplugged engine never
+        starts life already timed out.  Also runs the stall sweep when
+        ``stall_timeout_s`` is set."""
+        from repro.runtime.fault_tolerance import HeartbeatMonitor
+        pol = self._retry
+        me = threading.current_thread()
+        hb: Optional[HeartbeatMonitor] = None
+        names: list[str] = []
+        tick = 0
+        while True:
+            time.sleep(pol.monitor_interval_s)
+            with self._cond:
+                if (self._stopping or not self._started
+                        or self._monitor is not me):
+                    return
+                cur = [n for n, w in self._workers.items() if not w.stopped]
+                if hb is None or cur != names:
+                    names = cur
+                    hb = HeartbeatMonitor(
+                        len(names), timeout_steps=pol.timeout_steps)
+                    tick = 0
+                tick += 1
+                for h, n in enumerate(names):
+                    w = self._workers.get(n)
+                    if (w is not None and w.thread is not None
+                            and w.thread.is_alive()):
+                        hb.beat(h, tick)
+                dead = [names[h] for h in hb.failed_hosts(tick)]
+                for n in dead:
+                    w = self._workers.get(n)
+                    if w is not None and not w.stopped:
+                        self._on_worker_death_locked(w)
+                if dead:
+                    hb = None          # membership changed: rebuild
+                if pol.stall_timeout_s is not None:
+                    self._stall_sweep_locked()
+
+    def _on_worker_death_locked(self, w: _Worker) -> None:
+        """A worker thread died (crash, ``WorkerKilled`` injection): pop
+        it from the pool via the hotplug retirement path, reclaim BOTH
+        its queued panels and the panel it died holding (the live-panel
+        registry entry its crash left behind), and re-seed everything
+        onto the survivors.  An empty surviving pool fails the orphans —
+        same contract as ``remove_engine``."""
+        name = w.engine.name
+        self._workers.pop(name, None)
+        orphans = self._retire_worker_locked(w)
+        inflight = [job for job, (wn, _) in list(self._live_panels.items())
+                    if wn == name]
+        for job in inflight:
+            self._live_panels.pop(job, None)
+            if job.failed_on is None:
+                job.failed_on = []
+            if name not in job.failed_on:
+                job.failed_on.append(name)
+        orphans.extend(inflight)
+        self._worker_deaths += 1
+        tr = self._tracer
+        if tr is not None:
+            tr.emit("worker_death", name, runtime=self.name,
+                    queued=len(orphans) - len(inflight),
+                    in_flight=len(inflight))
+        if self._workers and orphans:
+            self._orphan_reseeds += len(orphans)
+            if tr is not None:
+                tr.emit("orphan_reseed", name, runtime=self.name,
+                        n_jobs=len(orphans))
+            self._seed_locked(orphans, affinity=None)
+        else:
+            for job in orphans:
+                job.sub.complete(job, name, None,
+                                 RuntimeError(f"worker {name!r} died with "
+                                              "no engines left"), 0.0, False)
+        self._cond.notify_all()
+        if self._flight is not None:
+            self._flight.dump(
+                "worker_death", stats=self.stats(),
+                context={"runtime": self.name, "engine": name,
+                         "orphans": len(orphans),
+                         "in_flight": len(inflight)})
+
+    def _stall_sweep_locked(self) -> None:
+        """Presume panels in flight past ``stall_timeout_s`` wedged (or
+        their completion dropped) and re-seed a DUPLICATE attempt.  The
+        per-index idempotent merge makes the duplicate safe: first
+        completion wins, so a slow-but-alive original costs nothing but
+        the redundant compute."""
+        pol = self._retry
+        now = time.monotonic()
+        stalled = [(job, wn) for job, (wn, t0) in self._live_panels.items()
+                   if now - t0 >= pol.stall_timeout_s]
+        if not stalled:
+            return
+        tr = self._tracer
+        for job, wn in stalled:
+            self._live_panels.pop(job, None)
+            dup = _RuntimeJob(job.sub, job.index, job.fn, job.n_jobs,
+                              job.job_macs, job.job_bytes, job.stealable,
+                              job.int8_ok, job.priority, job.deadline_at)
+            dup.attempts = job.attempts + 1
+            dup.failed_on = [wn] if pol.avoid_failed_engine else []
+            self._retries += 1
+            job.sub.future.retries += 1
+            if tr is not None:
+                tr.emit("panel_retry", wn,
+                        jobset=job.sub.future.jobset.name,
+                        attempt=dup.attempts, err="stall")
+            self._seed_locked([dup], affinity=None)
+        self._cond.notify_all()
+
+    def _maybe_retry(self, w: _Worker, job: _RuntimeJob,
+                     err: BaseException) -> Optional[BaseException]:
+        """Decide a failed panel's fate under the RetryPolicy.  Returns
+        None when the panel was re-seeded for another attempt (the
+        submission hears nothing), or the error to complete with —
+        :class:`PanelRetryExhausted` once the budget ran out.  Every
+        fault also feeds the worker's health EMA, so a chronically
+        faulty engine quarantines through the PR 7 machinery."""
+        retry = self._retry
+        if not isinstance(err, Exception):
+            return err                 # WorkerKilled etc. never retry here
+        name = job.sub.future.jobset.name
+        with self._cond:
+            job.attempts += 1
+            if job.failed_on is None:
+                job.failed_on = []
+            if w.engine.name not in job.failed_on:
+                job.failed_on.append(w.engine.name)
+            if w.health is not None and self._health is not None:
+                w.health.record_fault(self._health)
+                if w.health.should_quarantine(self._health):
+                    self._quarantine_locked(w)
+            if job.attempts >= retry.max_attempts:
+                exhausted = PanelRetryExhausted(name, job.attempts,
+                                                job.failed_on, err)
+                if self._flight is not None:
+                    self._flight.dump(
+                        "retry_exhausted", stats=self.stats(),
+                        context={"runtime": self.name, "jobset": name,
+                                 "attempts": job.attempts,
+                                 "engines": list(job.failed_on),
+                                 "last_error": f"{type(err).__name__}: "
+                                               f"{err}"})
+                return exhausted
+            self._retries += 1
+            job.sub.future.retries += 1
+            tr = self._tracer
+            if tr is not None:
+                tr.emit("panel_retry", w.engine.name, jobset=name,
+                        attempt=job.attempts, err=type(err).__name__)
+            if retry.backoff_s > 0:
+                t = threading.Timer(retry.backoff_s, self._reseed_retry,
+                                    args=(job,))
+                t.daemon = True
+                t.start()
+            else:
+                self._seed_locked([job], affinity=None)
+                self._cond.notify_all()
+        return None
+
+    def _reseed_retry(self, job: _RuntimeJob) -> None:
+        """Backoff-timer body: re-seed one retried panel, or fail it if
+        the runtime went away while it waited."""
+        with self._cond:
+            if not self._started or self._stopping:
+                job.sub.complete(
+                    job, "<retry>", None,
+                    RuntimeError("runtime shut down before retry"),
+                    0.0, False)
+                return
+            self._seed_locked([job], affinity=None)
+            self._cond.notify_all()
+
+    @staticmethod
+    def _screen_output(part) -> bool:
+        """True when a panel partial fails the NaN/Inf integrity screen.
+        Float outputs only: the int8 path's int32 accumulators cannot
+        encode a NaN, and casting them through float to check would cost
+        exactness for nothing."""
+        import jax.numpy as jnp
+        if part is None or not hasattr(part, "dtype"):
+            return False
+        if not jnp.issubdtype(part.dtype, jnp.floating):
+            return False
+        return not bool(jnp.isfinite(part).all())
 
     # -------------------------------------------------------- submissions
     def _on_submission_done(self, fut: RuntimeFuture) -> None:
@@ -946,7 +1254,7 @@ class SynergyRuntime:
 
     def submit_graph(self, nodes, edges, *, affinity: Optional[str] = None,
                      granularity: str = "job", name: str = "graph",
-                     qos: Optional[QosTag] = None):
+                     qos: Optional[QosTag] = None, node_retries: int = 0):
         """Submit a dependency GRAPH of nodes: each node is a
         :class:`~repro.core.job.JobSet` (accounting-only) or a
         :class:`repro.soc.graph.GraphNode` (host compute / nested
@@ -958,10 +1266,14 @@ class SynergyRuntime:
         so stealing, hotplug rebalances and ``submit_timeout`` apply to
         graph work unchanged.  Returns a
         :class:`repro.soc.graph.GraphFuture` (per-node values, merged
-        accounting, ``cancel()``)."""
+        accounting, ``cancel()``).  ``node_retries=N`` relaunches a
+        failed node (whole, as a fresh submission) up to N times before
+        its descendants are cancelled — the graph-level complement of
+        the runtime's panel-level :class:`RetryPolicy`."""
         from .graph import _GraphRun
         run = _GraphRun(self, nodes, edges, affinity=affinity,
-                        granularity=granularity, name=name, qos=qos)
+                        granularity=granularity, name=name, qos=qos,
+                        node_retries=node_retries)
         run.start()
         return run.future
 
@@ -977,11 +1289,29 @@ class SynergyRuntime:
             pool = self._host_pool
         pool.submit(fn, *args)
 
+    @staticmethod
+    def _drain_error(error: BaseException, job: _RuntimeJob) -> BaseException:
+        """A PER-JOB copy of a drain error.  Completing multiple jobs with
+        the SAME exception instance raises one object into every waiter
+        thread — each ``raise`` rewrites ``__traceback__``, so concurrent
+        waiters see each other's (cross-contaminated) tracebacks.  Each
+        drained jobset gets its own instance, naming the jobset it
+        drained."""
+        name = job.sub.future.jobset.name
+        try:
+            return type(error)(f"{error} [drained jobset {name!r}]")
+        except Exception:
+            # error types with non-message constructors still get a
+            # fresh per-job instance, just a plainer one
+            return RuntimeError(f"{type(error).__name__}: {error} "
+                                f"[drained jobset {name!r}]")
+
     def _drain_jobs_locked(self, predicate, error: BaseException) -> int:
         """Remove queued (unstarted) jobs matching ``predicate`` from every
-        worker deque, completing each with ``error``; in-flight jobs are
-        untouched.  The cancellation half of ``GraphFuture.cancel``:
-        a failed upstream node must not leave orphan panels running."""
+        worker deque, completing each with a PER-JOB copy of ``error``
+        (see :meth:`_drain_error`); in-flight jobs are untouched.  The
+        cancellation half of ``GraphFuture.cancel``: a failed upstream
+        node must not leave orphan panels running."""
         n = 0
         for w in self._workers.values():
             drained = [j for j in w.queue if predicate(j)]
@@ -991,7 +1321,8 @@ class SynergyRuntime:
             w.queue.clear()
             w.queue.extend(kept)
             for job in drained:
-                job.sub.complete(job, w.engine.name, None, error, 0.0, False)
+                job.sub.complete(job, w.engine.name, None,
+                                 self._drain_error(error, job), 0.0, False)
             n += len(drained)
         return n
 
@@ -1208,6 +1539,8 @@ class SynergyRuntime:
                     "health": (w.health.health if w.health is not None
                                else None),
                     "quarantined": w.quarantined,
+                    "faults": (w.health.faults if w.health is not None
+                               else 0),
                 }
             ests = [p["est_busy_s"] for p in per.values()]
             agg = (sum(ests) / (len(ests) * max(ests))
@@ -1219,6 +1552,9 @@ class SynergyRuntime:
                 "submissions": self._submissions,
                 "rebalances": self._rebalances,
                 "quarantines": self._quarantines,
+                "retries": self._retries,
+                "worker_deaths": self._worker_deaths,
+                "orphan_reseeds": self._orphan_reseeds,
                 # totals include retired engines' work so a hot-unplug
                 # never makes the counters go backwards
                 "total_jobs": sum(p["jobs"] for p in per.values())
@@ -1238,6 +1574,9 @@ class SynergyRuntime:
             self._submissions = 0
             self._rebalances = 0
             self._quarantines = 0
+            self._retries = 0
+            self._worker_deaths = 0
+            self._orphan_reseeds = 0
 
     def scope(self):
         """``with rt.scope(): ...`` — route every ``synergy_matmul`` in the

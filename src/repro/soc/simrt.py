@@ -28,7 +28,7 @@ from .qos_policy import (NEUTRAL_TAG, effective_deadline, qos_victim,
                          queue_insert_index)
 
 __all__ = ["SimRuntime", "SimRuntimeResult", "SimGraphResult",
-           "SimQosResult"]
+           "SimQosResult", "SimFaultResult"]
 
 
 @dataclasses.dataclass
@@ -57,6 +57,23 @@ class SimGraphResult(SimRuntimeResult):
     the usual per-engine accounting."""
 
     node_finish_s: tuple[float, ...] = ()
+
+
+@dataclasses.dataclass
+class SimFaultResult(SimRuntimeResult):
+    """One fault-schedule run in virtual time: the usual per-engine
+    accounting plus the recovery audit — retries consumed, workers
+    lost, orphans re-seeded, and every injected ``(engine, kind, call)``
+    in virtual order.  ``completed_jobs`` counts jobs whose unit
+    ultimately completed (the exactly-once conformance surface: it must
+    equal the jobset's job count for any retryable plan)."""
+
+    retries: int = 0
+    worker_deaths: int = 0
+    orphan_reseeds: int = 0
+    exhausted: int = 0
+    injected: tuple = ()
+    completed_jobs: int = 0
 
 
 @dataclasses.dataclass
@@ -185,6 +202,213 @@ class SimRuntime:
             per_engine_jobs=dict(zip(names, jobs_run)),
             per_engine_busy=dict(zip(names, busy)),
             per_engine_steals=dict(zip(names, steals)))
+
+    def run_faults(self, jobset, plan, retry, *,
+                   affinity: Optional[str] = None,
+                   granularity: str = "job") -> SimFaultResult:
+        """Execute one JobSet under a :class:`~repro.soc.faults.FaultPlan`
+        and :class:`~repro.soc.faults.RetryPolicy` in VIRTUAL time — the
+        conformance twin of the live runtime's fault recovery.
+
+        Modeled kinds: ``raise``/``corrupt`` (the unit fails — instantly
+        for a raise, after its full service time for corruption, matching
+        where the live integrity guard detects it — and re-seeds onto an
+        eligible engine avoiding the ones it failed on), ``slowdown``
+        (service time × the ramping factor), and ``die`` (the engine
+        leaves the pool at the virtual fault instant; its in-flight unit
+        and queue re-seed onto the survivors).  ``stall``/``drop`` are
+        wall-clock phenomena (the live stall sweep races real threads)
+        and raise ``ValueError`` here.
+
+        Emits the SAME event kinds and tag keys the live runtime emits
+        (``fault_injected``/``panel_retry``/``worker_death``/
+        ``orphan_reseed``) with virtual stamps, so a sim trace schema-
+        checks against a live trace of the same plan."""
+        for s in plan.specs:
+            if s.kind in ("stall", "drop"):
+                raise ValueError(
+                    f"run_faults cannot model wall-clock kind {s.kind!r}")
+        j = next(jobset.jobs()) if jobset.num_jobs else None
+        names = [e.name for e in self.engines]
+        if j is None:
+            zero = {n: 0 for n in names}
+            return SimFaultResult(0.0, dict(zero),
+                                  {n: 0.0 for n in names}, dict(zero))
+        if granularity == "job":
+            per = [(1, j.macs, j.bytes_moved)] * jobset.num_jobs
+        else:
+            gm, gn = jobset.grid
+            per = [(gn, j.macs, j.bytes_moved)] * gm
+        # mutable unit records: retry bookkeeping rides on the unit
+        units = [{"n_jobs": n_jobs, "macs": macs, "nbytes": nbytes,
+                  "attempts": 0, "failed": []}
+                 for n_jobs, macs, nbytes in per]
+
+        queues: list[list] = [[] for _ in self.engines]
+        home = names.index(affinity) if affinity in names else 0
+        queues[home].extend(units)
+
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("seed", "manager", ts=0.0, runtime="sim",
+                    n_jobs=len(units), affinity=affinity)
+            for u in units:
+                tr.emit("enqueue", names[home], ts=0.0,
+                        jobset=jobset.name, n_jobs=u["n_jobs"], priority=0)
+
+        rates = [e.cost.macs_per_s for e in self.engines]
+        busy = [0.0] * len(self.engines)
+        jobs_run = [0] * len(self.engines)
+        steals = [0] * len(self.engines)
+        free = [True] * len(self.engines)
+        alive = [True] * len(self.engines)
+        calls = [0] * len(self.engines)
+        specs = [plan.for_engine(n) for n in names]
+
+        n_retries = deaths = reseeds = exhausted = 0
+        injected: list[tuple[str, str, int]] = []
+        completed_jobs = 0
+
+        events: list = []
+        seq = itertools.count()
+        now = 0.0
+
+        def unit_time(i: int, u: dict) -> float:
+            return u["n_jobs"] * self.engines[i].cost.job_time(u["macs"],
+                                                               u["nbytes"])
+
+        def queue_load(i: int) -> float:
+            return sum(unit_time(i, u) for u in queues[i])
+
+        def reseed(us: list[dict], source: str) -> None:
+            """LPT the orphaned/retried units back onto the live pool,
+            honoring ``avoid_failed_engine`` where an alternative
+            exists."""
+            for u in us:
+                elig = [i for i in range(len(names)) if alive[i]]
+                if retry.avoid_failed_engine:
+                    avoided = [i for i in elig
+                               if names[i] not in u["failed"]]
+                    if avoided:
+                        elig = avoided
+                loads = [queue_load(i) for i in range(len(names))]
+                costs = [unit_time(i, u) for i in range(len(names))]
+                ai = lpt_pick(elig, loads, costs)
+                queues[ai].append(u)
+                if tr is not None:
+                    tr.emit("enqueue", names[ai], ts=now,
+                            jobset=jobset.name, n_jobs=u["n_jobs"],
+                            priority=0)
+
+        def try_dispatch(i: int) -> None:
+            nonlocal n_retries, deaths, reseeds
+            if not free[i] or not alive[i]:
+                return
+            unit = None
+            stolen = False
+            victim = None
+            if queues[i]:
+                unit = queues[i].pop(0)
+            else:
+                lens = [len(q) for q in queues]
+                if any(lens):
+                    v = pick_victim(lens)
+                    fastest = max(r for r, a in zip(rates, alive) if a)
+                    if v != i and should_steal(rates[i] / fastest,
+                                               lens[v]):
+                        unit = queues[v].pop()     # steal from the tail
+                        stolen = True
+                        victim = names[v]
+            if unit is None:
+                return
+            call = calls[i]
+            calls[i] += 1
+            spec = next((s for s in specs[i] if s.hits(call)), None)
+            if spec is not None:
+                injected.append((names[i], spec.kind, call))
+                if tr is not None:
+                    tr.emit("fault_injected", names[i], ts=now,
+                            fault=spec.kind, call=call, at_call=spec.at_call)
+            if spec is not None and spec.kind == "die":
+                # the engine leaves the pool NOW: its in-flight unit and
+                # queued units re-seed onto the survivors
+                alive[i] = False
+                free[i] = False
+                unit["failed"].append(names[i])
+                orphans = [unit] + queues[i]
+                queues[i] = []
+                deaths += 1
+                reseeds += len(orphans)
+                if tr is not None:
+                    tr.emit("worker_death", names[i], ts=now,
+                            runtime="sim", queued=len(orphans) - 1,
+                            in_flight=1)
+                    tr.emit("orphan_reseed", names[i], ts=now,
+                            runtime="sim", n_jobs=len(orphans))
+                reseed(orphans, names[i])
+                for k in range(len(names)):
+                    try_dispatch(k)
+                return
+            dt = unit_time(i, unit)
+            err = None
+            if spec is not None:
+                if spec.kind == "raise":
+                    err, dt = "InjectedFault", 0.0
+                elif spec.kind == "corrupt":
+                    # detected by the integrity guard AFTER the compute
+                    err = "CorruptOutput"
+                elif spec.kind == "slowdown":
+                    dt *= spec.factor + spec.ramp * (call - spec.at_call)
+            free[i] = False
+            busy[i] += dt
+            jobs_run[i] += unit["n_jobs"]
+            steals[i] += int(stolen)
+            if tr is not None:
+                if stolen:
+                    tr.emit("steal", names[i], ts=now, victim=victim,
+                            jobset=jobset.name, priority=0, probe=False)
+                else:
+                    tr.emit("dequeue", names[i], ts=now,
+                            jobset=jobset.name, n_jobs=unit["n_jobs"])
+                tags = {"jobset": jobset.name, "n_jobs": unit["n_jobs"],
+                        "stolen": stolen, "priority": 0}
+                if err is not None:
+                    tags["err"] = err
+                tr.span("panel", names[i], now, dt, **tags)
+            heapq.heappush(events, (now + dt, next(seq), i, unit, err))
+
+        for i in range(len(self.engines)):
+            try_dispatch(i)
+        while events:
+            now, _, i, unit, err = heapq.heappop(events)
+            if alive[i]:
+                free[i] = True
+            if err is not None:
+                unit["attempts"] += 1
+                if names[i] not in unit["failed"]:
+                    unit["failed"].append(names[i])
+                if unit["attempts"] >= retry.max_attempts:
+                    exhausted += 1       # submission fails; unit is done
+                else:
+                    n_retries += 1
+                    if tr is not None:
+                        tr.emit("panel_retry", names[i], ts=now,
+                                jobset=jobset.name,
+                                attempt=unit["attempts"], err=err)
+                    reseed([unit], names[i])
+            else:
+                completed_jobs += unit["n_jobs"]
+            for k in range(len(names)):
+                try_dispatch(k)
+
+        return SimFaultResult(
+            makespan_s=now,
+            per_engine_jobs=dict(zip(names, jobs_run)),
+            per_engine_busy=dict(zip(names, busy)),
+            per_engine_steals=dict(zip(names, steals)),
+            retries=n_retries, worker_deaths=deaths,
+            orphan_reseeds=reseeds, exhausted=exhausted,
+            injected=tuple(injected), completed_jobs=completed_jobs)
 
     def run_qos(self, submissions, *, quarantined: Sequence[str] = (),
                 granularity: str = "job") -> SimQosResult:

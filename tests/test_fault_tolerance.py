@@ -1,0 +1,161 @@
+"""Unit tests for the elastic-training fault-tolerance seed modules
+(ISSUE 9 satellite b): ``repro.runtime.fault_tolerance`` (heartbeat
+monitor, elastic re-meshing, checkpoint/restart supervisor) and
+``repro.runtime.straggler`` (between-step work-share rebalancing) —
+plus the contract that the SoC runtime's worker-death detector reuses
+the SAME HeartbeatMonitor definition (one timeout semantic, not two).
+"""
+
+import pytest
+
+import repro.soc.runtime as soc_runtime
+from repro.runtime.fault_tolerance import (FailureEvent, HeartbeatMonitor,
+                                           plan_elastic_mesh,
+                                           run_with_recovery)
+from repro.runtime.straggler import StragglerRebalancer
+from repro.soc import RetryPolicy
+
+
+# ------------------------------------------------------------ heartbeat
+
+def test_heartbeat_monitor_flags_silent_hosts():
+    hb = HeartbeatMonitor(n_hosts=4, timeout_steps=3)
+    for step in range(1, 6):
+        for h in (0, 1, 3):               # host 2 goes silent after step 0
+            hb.beat(h, step)
+    assert hb.failed_hosts(step=5) == [2]
+    # a late beat clears the verdict — detection is state, not history
+    hb.beat(2, 5)
+    assert hb.failed_hosts(step=5) == []
+
+
+def test_heartbeat_monitor_timeout_boundary():
+    hb = HeartbeatMonitor(n_hosts=1, timeout_steps=3)
+    hb.beat(0, 10)
+    assert hb.failed_hosts(13) == []      # exactly timeout_steps late: alive
+    assert hb.failed_hosts(14) == [0]     # one step beyond: failed
+
+
+def test_soc_runtime_reuses_heartbeat_monitor_definition():
+    """The SoC worker-death detector must be the SAME class, and
+    RetryPolicy.timeout_steps converts its wall-clock knobs into the
+    step-granularity timeout the monitor speaks."""
+    import repro.runtime.fault_tolerance as ft
+    assert soc_runtime.HeartbeatMonitor is ft.HeartbeatMonitor
+    retry = RetryPolicy(heartbeat_timeout_s=0.5, monitor_interval_s=0.1)
+    assert retry.timeout_steps == 5
+    hb = HeartbeatMonitor(n_hosts=2, timeout_steps=retry.timeout_steps)
+    hb.beat(0, 5)
+    assert hb.failed_hosts(7) == [1]      # never beat past construction
+
+
+# ------------------------------------------------------- elastic re-mesh
+
+def test_plan_elastic_mesh_drops_data_replicas():
+    assert plan_elastic_mesh(64, model_parallel=16) == (4, 16)
+    assert plan_elastic_mesh(63, model_parallel=16) == (3, 16)  # lost one
+
+
+def test_plan_elastic_mesh_pods_axis():
+    assert plan_elastic_mesh(64, model_parallel=16, pods=2) == (2, 2, 16)
+    assert plan_elastic_mesh(32, model_parallel=16, pods=2) == (2, 1, 16)
+
+
+def test_plan_elastic_mesh_too_few_survivors():
+    with pytest.raises(RuntimeError, match="cannot re-mesh"):
+        plan_elastic_mesh(15, model_parallel=16)
+
+
+# ------------------------------------------------- checkpoint supervisor
+
+class _Ckpt:
+    """Duck-typed checkpointer: remembers the last saved (step, state)."""
+
+    def __init__(self):
+        self.step = None
+        self.state = None
+        self.restores = 0
+
+    def save(self, step, state):
+        self.step, self.state = step, state
+
+    def latest_step(self):
+        return self.step
+
+    def restore(self, _state):
+        self.restores += 1
+        return self.state
+
+
+def test_run_with_recovery_restores_and_resumes():
+    ckpt = _Ckpt()
+    crashed = []
+
+    def run_steps(start, end, state):
+        for step in range(start, end):
+            if step == 5 and not crashed:
+                crashed.append(step)
+                raise RuntimeError("host 3 lost")
+            state += 1
+            ckpt.save(step + 1, state)
+        return state
+
+    events = []
+    final, failures = run_with_recovery(
+        steps=10, run_steps=run_steps, checkpointer=ckpt, state0=0,
+        on_failure=events.append)
+    # resumed from the step-5 checkpoint: exactly 10 increments total
+    assert final == 10
+    assert ckpt.restores == 1
+    assert [f.kind for f in failures] == ["step-exception"]
+    assert events == failures and isinstance(events[0], FailureEvent)
+
+
+def test_run_with_recovery_cold_restart_without_checkpoint():
+    calls = []
+
+    def run_steps(start, end, state):
+        calls.append(start)
+        if len(calls) == 1:
+            raise RuntimeError("early fault")
+        return state + (end - start)
+
+    final, failures = run_with_recovery(
+        steps=4, run_steps=run_steps, checkpointer=_Ckpt(), state0=0)
+    assert final == 4 and calls == [0, 0]   # no checkpoint: restart at 0
+    assert len(failures) == 1
+
+
+def test_run_with_recovery_exceeds_max_restarts():
+    def run_steps(start, end, state):
+        raise RuntimeError("always down")
+
+    with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
+        run_with_recovery(steps=3, run_steps=run_steps,
+                          checkpointer=_Ckpt(), state0=0, max_restarts=2)
+
+
+# ---------------------------------------------------- straggler shares
+
+def test_straggler_rebalancer_shrinks_slow_cluster_share():
+    rb = StragglerRebalancer(n_clusters=3)
+    for _ in range(8):
+        shares = rb.observe([1.0, 1.0, 2.0])   # cluster 2 runs 2x slow
+    assert shares[2] < shares[0]
+    assert shares[0] == pytest.approx(shares[1], rel=1e-6)
+    assert sum(shares) == pytest.approx(1.0)
+    assert all(s >= rb.min_share for s in shares)
+    assert len(rb.history) == 8
+
+
+def test_straggler_split_jobs_conserves_and_matches_shares():
+    rb = StragglerRebalancer(n_clusters=3)
+    for _ in range(8):
+        rb.observe([1.0, 1.0, 3.0])
+    for n in (1, 7, 32, 97):
+        counts = rb.split_jobs(n)
+        assert sum(counts) == n             # every tile job owned once
+        assert len(counts) == 3
+        assert all(c >= 0 for c in counts)
+    counts = rb.split_jobs(100)
+    assert counts[2] < counts[0]            # slow cluster owns less
