@@ -32,7 +32,8 @@ _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
                "fpga_fps", "het_fps", "tokens_per_s_rel",
                "prefill_overlap_rel", "decode_p99_rel",
                "slo_attainment_rel", "recovery_fps_rel",
-               "trace_overhead_rel", "fault_recovery_rel")
+               "trace_overhead_rel", "fault_recovery_rel",
+               "restart_recovery_rel")
 
 #: ABSOLUTE floors, checked on the NEW run alone (no baseline needed):
 #: a ratio below its floor fails even if the baseline was also below it.
@@ -41,7 +42,11 @@ _FPS_FIELDS = ("fps", "weighted_fps", "sf_fps", "sc_fps", "ws_fps",
 #: ``fault_recovery_rel`` is the ISSUE 9 fault-recovery gate — a pool
 #: that loses an engine mid-run must keep >= 0.8x clean throughput once
 #: the orphaned panels re-seed onto the survivors.
-_FLOOR_FIELDS = {"trace_overhead_rel": 0.95, "fault_recovery_rel": 0.8}
+#: ``restart_recovery_rel`` is the ISSUE 10 durable-serving gate — a
+#: server restored from a crash (snapshot + journal replay) must keep
+#: >= 0.8x a clean durable server's steady-state tokens/s.
+_FLOOR_FIELDS = {"trace_overhead_rel": 0.95, "fault_recovery_rel": 0.8,
+                 "restart_recovery_rel": 0.8}
 
 
 def load_run(path: str) -> dict:

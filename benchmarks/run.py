@@ -42,6 +42,12 @@ def main(argv=None) -> None:
                              "(open in chrome://tracing or ui.perfetto.dev)")
     args = parser.parse_args(argv)
 
+    # SIGTERM mid-benchmark (CI timeout, operator ctrl) gracefully drains
+    # any durable server a benchmark has live — clean final snapshot and
+    # a closed journal instead of a dead pool and a torn tail
+    from repro.soc import install_sigterm_handler
+    install_sigterm_handler()
+
     tracer = None
     if args.trace:
         # process-default tracer: benchmarks construct their runtimes

@@ -50,6 +50,7 @@ class Checkpointer:
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        self._gc_stale_tmp()
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Any, *, block: bool = False) -> None:
@@ -65,9 +66,22 @@ class Checkpointer:
         else:
             self._write(step, host)
 
+    def _gc_stale_tmp(self) -> None:
+        """Remove ``step_*.tmp`` wreckage from a writer killed mid-save.
+        A ``.tmp`` that was never renamed holds a partial array set; left
+        in place it would seed a later same-step save with stale files."""
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+
     def _write(self, step: int, host: list) -> None:
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            # a previous writer died mid-save at this very step: start clean
+            # rather than inherit its partial (possibly stale-shaped) files
+            shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
         manifest = {}
         for key, arr in host:
@@ -96,7 +110,8 @@ class Checkpointer:
     def all_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp"):
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.isdir(os.path.join(self.directory, name))):
                 try:
                     out.append(int(name.split("_")[1]))
                 except ValueError:

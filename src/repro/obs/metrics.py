@@ -327,6 +327,16 @@ def collect_server(srv, registry: MetricsRegistry = REGISTRY) -> None:
     registry.counter("repro_serve_shed_engagements_total",
                      "load-shed ladder engagements").set_total(
         s.shed_engagements)
+    registry.counter("repro_serve_replayed_tokens_total",
+                     "tokens recomputed from the journal on restore "
+                     "(already delivered; not throughput)").set_total(
+        getattr(s, "replayed_tokens", 0))
+    registry.counter("repro_serve_snapshots_total",
+                     "crash-consistent snapshots taken").set_total(
+        getattr(s, "snapshots", 0))
+    registry.counter("repro_serve_restores_total",
+                     "successful snapshot+journal restores").set_total(
+        getattr(s, "restores", 0))
     registry.gauge("repro_serve_shed_level",
                    "current shed ladder level").set(
         getattr(srv, "_shed_level", 0))

@@ -42,6 +42,8 @@ EVENT_KINDS = frozenset({
     "dispatch",
     "fault_injected", "panel_retry",     # fault-injection + recovery layer
     "worker_death", "orphan_reseed",
+    "journal", "snapshot", "restore",    # durable-serving layer
+    "drain",
 })
 
 #: kinds exported as paired "X" complete events (the rest are instants)

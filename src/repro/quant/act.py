@@ -140,6 +140,24 @@ class ActCalibrator:
         with self._lock:
             return dict(self._scales)
 
+    def export_state(self) -> list:
+        """JSON-safe dump of every shape's EMA for durable snapshots.
+        Keys are hashables (usually ``(k, n)`` tuples); tuples serialize
+        as lists and :meth:`import_state` turns them back."""
+        with self._lock:
+            return [[list(k) if isinstance(k, tuple) else k,
+                     s.amax, s.updates]
+                    for k, s in self._scales.items()]
+
+    def import_state(self, state: list) -> None:
+        """Restore :meth:`export_state` output — restored scales resume
+        the exact EMA trajectory (same floats, same update counts)."""
+        with self._lock:
+            self._scales = {
+                tuple(k) if isinstance(k, list) else k:
+                    ActScale(amax=float(amax), updates=int(updates))
+                for k, amax, updates in state}
+
     def reset(self) -> None:
         with self._lock:
             self._scales.clear()

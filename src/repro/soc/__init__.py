@@ -14,6 +14,9 @@ so simulated and live steal decisions agree for identical cost models.
     print(rt.stats()["total_steals"])
 """
 
+from .durable import (CrashPlan, Durability, RequestJournal,
+                      RestoreMismatch, SimulatedCrash,
+                      install_sigterm_drain, install_sigterm_handler)
 from .faults import (FAULT_KINDS, CorruptOutput, DroppedCompletion,
                      FaultPlan, FaultSpec, FaultyEngine, InjectedFault,
                      PanelRetryExhausted, RetryPolicy, WorkerKilled,
@@ -43,4 +46,6 @@ __all__ = [
     "FAULT_KINDS", "FaultPlan", "FaultSpec", "FaultyEngine", "RetryPolicy",
     "InjectedFault", "CorruptOutput", "WorkerKilled", "DroppedCompletion",
     "PanelRetryExhausted", "wrap_pool",
+    "Durability", "RequestJournal", "CrashPlan", "SimulatedCrash",
+    "RestoreMismatch", "install_sigterm_handler", "install_sigterm_drain",
 ]

@@ -135,6 +135,17 @@ class EngineHealth:
                 "probe_samples": self.probe_samples,
                 "faults": self.faults}
 
+    def export_state(self) -> dict:
+        """Full state for durable snapshots — unlike :meth:`snapshot`
+        (a display view), this covers every slot so a restored worker
+        resumes with its learned baseline and quarantine status intact."""
+        return {s: getattr(self, s) for s in self.__slots__}
+
+    def import_state(self, state: dict) -> None:
+        for s in self.__slots__:
+            if s in state:
+                setattr(self, s, state[s])
+
     def observe(self, rate: float, policy: HealthPolicy) -> None:
         """Fold one measured per-panel MAC rate into the EMA."""
         self.ema_rate = (rate if self.samples == 0

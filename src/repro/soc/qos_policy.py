@@ -144,12 +144,19 @@ class FairShare:
         """``candidates``: ``(name, priority, head_deadline_at, weight)``
         per tenant with pending work.  Returns the tenant to admit from
         (does NOT charge — call :meth:`charge` once the pop commits)."""
-        floor = min(self._vt.values()) if self._vt else 0.0
-        for name, _, _, _ in candidates:
-            if name not in self._vt:
-                self._vt[name] = floor
+        self.join(name for name, _, _, _ in candidates)
         return min(candidates,
                    key=lambda c: (-c[1], self._vt[c[0]], c[2], c[0]))[0]
+
+    def join(self, names) -> None:
+        """Enter unseen tenants at the current floor (the no-hoarding
+        rule).  Factored out of :meth:`pick` so journal replay — which
+        forces recorded admissions instead of re-picking — applies the
+        SAME entry rule and restored virtual times match exactly."""
+        floor = min(self._vt.values()) if self._vt else 0.0
+        for name in names:
+            if name not in self._vt:
+                self._vt[name] = floor
 
     def charge(self, name: str, weight: float) -> None:
         self._vt[name] = (self._vt.get(name, 0.0)
@@ -157,3 +164,8 @@ class FairShare:
 
     def snapshot(self) -> dict[str, float]:
         return dict(self._vt)
+
+    def restore(self, vt: dict) -> None:
+        """Adopt a :meth:`snapshot` — a restored server resumes fair
+        admission with the exact virtual times the crashed one had."""
+        self._vt = {str(k): float(v) for k, v in vt.items()}

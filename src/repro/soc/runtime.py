@@ -1166,6 +1166,54 @@ class SynergyRuntime:
         except OSError:
             pass               # persistence is best-effort, never fatal
 
+    # ------------------------------------------------- durable snapshots
+    def quiesce(self, timeout: float = 30.0) -> bool:
+        """Wait until no submission is in flight (a quiescent boundary a
+        crash-consistent snapshot can be taken at).  Admission is the
+        CALLER's job to stop — this only waits out what was already
+        submitted.  Returns False on timeout."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while self._inflight > 0:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self._cond.wait(min(left, 0.05))
+        return True
+
+    def state_snapshot(self) -> dict:
+        """Learned state worth surviving a process crash: per-engine
+        calibrated rates (what the sidecar persists, read from the live
+        cost models) and full health records.  JSON-safe."""
+        with self._lock:
+            rates = {}
+            health = {}
+            for name, w in self._workers.items():
+                if CAP_SIM not in w.engine.capabilities:
+                    try:
+                        rates[name] = float(w.engine.cost.macs_per_s)
+                    except NotImplementedError:
+                        pass
+                if w.health is not None:
+                    health[name] = w.health.export_state()
+        return {"macs_per_s": rates, "health": health}
+
+    def restore_state(self, state: dict) -> None:
+        """Re-apply :meth:`state_snapshot` onto the current pool.  Only
+        engines present in both the snapshot and the pool are touched
+        (the pool may have been reconfigured across the restart)."""
+        rates = state.get("macs_per_s", {})
+        health = state.get("health", {})
+        with self._lock:
+            workers = dict(self._workers)
+        for name, w in workers.items():
+            rate = rates.get(name)
+            if rate and rate > 0 and CAP_SIM not in w.engine.capabilities:
+                # alpha=1: the snapshot IS the measured rate, as _load_rates
+                w.engine.recalibrate(float(rate), alpha=1.0)
+            if w.health is not None and name in health:
+                w.health.import_state(health[name])
+
     def _submit_jobs(self, jobset, units: list[tuple], merge,
                      affinity: Optional[str],
                      stealable: bool = True,

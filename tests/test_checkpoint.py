@@ -52,6 +52,24 @@ def test_no_tmp_left_behind(tmp_path):
     assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
 
 
+def test_stale_tmp_gc_on_open(tmp_path):
+    """A process killed mid-save leaves ``step_N.tmp`` behind; the next
+    Checkpointer on the directory must sweep it (and ``all_steps`` must
+    never report it), or the orphan blocks a later save of the same
+    step and leaks disk forever on an embedded target."""
+    stale = tmp_path / "step_00000099.tmp"
+    stale.mkdir()
+    (stale / "half_written.npy").write_bytes(b"\x93NUMPY garbage")
+    # a *file* named like a snapshot dir must not crash the scan either
+    (tmp_path / "step_00000001").write_bytes(b"not a dir")
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    assert not stale.exists()
+    assert ck.all_steps() == []
+    ck.save(99, _state())                   # the once-blocked step saves
+    assert ck.latest_step() == 99
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
 def test_run_with_recovery_resumes(tmp_path):
     """Inject a failure at step 6; supervisor must restore step 5 and
     complete all 10 steps with the arithmetic intact."""

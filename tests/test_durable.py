@@ -1,0 +1,513 @@
+"""Durable serving (PR 10): the write-ahead request journal, crash-
+consistent snapshots through the seed Checkpointer, deterministic
+``CrashPlan`` crash/restore sweeps, journal-suffix replay, graceful
+drain/close, and SIGTERM wiring.
+
+The keystone property — token streams after restore are BITWISE identical
+to the uninterrupted run and every accepted request is served exactly
+once — is asserted here over fixed crash points (blocking admission,
+chunked prefill with tenants, and a real runtime pool); the randomized
+hypothesis sweep lives in test_durable_props.py."""
+
+import json
+import os
+import signal
+import struct
+import subprocess
+import sys
+import textwrap
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.serving import Request, ServeStats, SynergyServer
+from repro.models import init_model
+from repro.models.cnn import CNNConfig
+from repro.soc import (CrashPlan, Durability, HealthPolicy, QosClass,
+                       RequestJournal, RestoreMismatch, SimulatedCrash,
+                       SynergyRuntime, Tenant)
+from repro.soc.durable import array_to_meta, meta_to_array
+
+TINY_CNN = CNNConfig(
+    name="tiny", input_hw=8, cin=1, layers=(
+        ("conv", 4, 3, 1, 1), ("pool", 2),
+        ("conv", 8, 3, 1, 1), ("fc", 10),
+    ))
+
+_HDR = struct.Struct("<II")
+
+
+def _cfg():
+    return reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                   n_heads=2, d_ff=64, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, init_model(cfg, jax.random.key(0))
+
+
+def _reqs(n=4, new=5, tenant=None):
+    out = []
+    for i in range(n):
+        t = tenant(i) if callable(tenant) else tenant
+        out.append(Request(i, jnp.arange(4, dtype=jnp.int32) + i,
+                           max_new_tokens=new, tenant=t))
+    return out
+
+
+def _streams(reqs):
+    return {r.rid: list(r.out) for r in reqs}
+
+
+# ------------------------------------------------------------- journal
+
+def test_journal_roundtrip_and_offsets(tmp_path):
+    p = tmp_path / "j.bin"
+    j = RequestJournal(p)
+    recs = [{"t": "submit", "rid": 1, "tok": [1, 2, 3]},
+            {"t": "admit", "wave": [[1, 0]]},
+            {"t": "tok", "e": [[1, 0, 42]]}]
+    offs = [j.append(r) for r in recs]
+    assert offs == sorted(offs) and j.offset() == offs[-1]
+    j.close()
+    j.close()                                    # idempotent
+    got, end, torn = RequestJournal.scan(p)
+    assert got == recs and end == offs[-1] and not torn
+    # suffix scan from a stored boundary picks up exactly the tail
+    tail, _, _ = RequestJournal.scan(p, start=offs[0])
+    assert tail == recs[1:]
+
+
+def test_journal_truncates_torn_tail(tmp_path):
+    p = tmp_path / "j.bin"
+    j = RequestJournal(p)
+    j.append({"t": "submit", "rid": 7, "tok": [9]})
+    good = j.offset()
+    j.close()
+    with open(p, "ab") as f:                     # crash mid-append
+        f.write(_HDR.pack(100, 0) + b"only-part-of-the-payload")
+    recs, end, torn = RequestJournal.scan(p)
+    assert torn and end == good and len(recs) == 1
+    j2 = RequestJournal(p)                       # reopen truncates
+    assert j2.truncated_bytes > 0
+    assert os.path.getsize(p) == good
+    j2.append({"t": "tok", "e": [[7, 0, 1]]})    # appends land cleanly
+    j2.close()
+    recs, _, torn = RequestJournal.scan(p)
+    assert not torn and [r["t"] for r in recs] == ["submit", "tok"]
+
+
+def test_journal_rejects_corrupt_crc(tmp_path):
+    p = tmp_path / "j.bin"
+    j = RequestJournal(p)
+    j.append({"t": "submit", "rid": 1, "tok": [1]})
+    j.append({"t": "tok", "e": [[1, 0, 5]]})
+    j.close()
+    raw = bytearray(p.read_bytes())
+    raw[-1] ^= 0xFF                              # flip a payload byte
+    p.write_bytes(bytes(raw))
+    recs, _, torn = RequestJournal.scan(p)
+    assert torn and len(recs) == 1               # stops AT the bad record
+
+
+def test_meta_array_roundtrip():
+    meta = {"a": 1, "b": [1.5, None, "x"], "c": {"d": True}}
+    assert array_to_meta(meta_to_array(meta)) == meta
+
+
+def test_crash_plan_due():
+    plan = CrashPlan(at_step=3)
+    assert not plan.due(2) and plan.due(3) and plan.due(7)
+
+
+# ------------------------------------------- keystone: crash → restore
+
+def _crash_restore(cfg, params, workdir, crash_at, *, reqs, ref,
+                   snapshot_every=3, tenants=None, **kw):
+    """Run to a deterministic crash, restore, finish, and assert the
+    keystone: bitwise streams + exactly-once accounting."""
+    d = Durability(str(workdir), snapshot_every=snapshot_every)
+    srv = SynergyServer(cfg, params, tenants=tenants, durable=d,
+                        crash_plan=CrashPlan(at_step=crash_at), **kw)
+    rr = reqs()
+    with pytest.raises(SimulatedCrash):
+        for r in rr:
+            srv.submit(r)
+        srv.run()
+    srv2 = SynergyServer.restore(cfg, params, durable=d,
+                                 tenants=tenants, **kw)
+    srv2.run()
+    got = {rid: list(r.out) for rid, r in srv2.restored_requests.items()}
+    for r in rr:
+        assert got.get(r.rid, list(r.out)) == ref[r.rid], \
+            f"crash_at={crash_at} rid={r.rid}"
+    # exactly once: fresh + replayed tokens == the uninterrupted total
+    assert (srv2.stats.tokens_out + srv2.stats.replayed_tokens
+            == sum(max(0, len(v) - 1) for v in ref.values()))
+    assert srv2.stats.restores == 1
+    return srv, srv2
+
+
+def test_crash_restore_blocking_sweep(model, tmp_path):
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4, admission="wave")
+    ref_srv = SynergyServer(cfg, params, **kw)
+    rr = _reqs()
+    for r in rr:
+        ref_srv.submit(r)
+    ref_srv.run()
+    ref = _streams(rr)
+    for crash_at in (1, 2, 5, 9):
+        _crash_restore(cfg, params, tmp_path / f"at{crash_at}", crash_at,
+                       reqs=_reqs, ref=ref, **kw)
+
+
+def test_crash_restore_chunked_tenants_sweep(model, tmp_path):
+    """Chunked prefill + 2 tenants: streams stay bitwise, the replayed
+    admissions charge FairShare identically (restored virtual times ==
+    the uninterrupted run's), and nothing double-books."""
+    cfg, params = model
+    tenants = [Tenant("acme", QosClass("interactive", priority=1,
+                                       weight=2.0)),
+               Tenant("bulk", QosClass("bulk", priority=0, weight=1.0))]
+    kw = dict(slots=2, max_len=32, prefill_len=4,
+              prefill_chunk_macs=2_000)
+    mk = lambda: _reqs(5, tenant=lambda i: "acme" if i % 2 == 0
+                       else "bulk")
+    ref_srv = SynergyServer(cfg, params, tenants=tenants, **kw)
+    rr = mk()
+    for r in rr:
+        ref_srv.submit(r)
+    ref_srv.run()
+    ref, ref_vt = _streams(rr), ref_srv._fair.snapshot()
+    for crash_at in (1, 5, 8, 13):
+        _, srv2 = _crash_restore(
+            cfg, params, tmp_path / f"at{crash_at}", crash_at,
+            reqs=mk, ref=ref, snapshot_every=4, tenants=tenants, **kw)
+        assert srv2._fair.snapshot() == ref_vt
+        # replay recomputes state, it does not re-serve: per-tenant
+        # tokens stay <= the uninterrupted totals
+        for name, ts in srv2.stats.tenants.items():
+            assert ts.tokens_out <= ref_srv.stats.tenants[name].tokens_out
+
+
+def test_restore_survives_torn_journal_tail(model, tmp_path):
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4)
+    ref_srv = SynergyServer(cfg, params, **kw)
+    rr = _reqs()
+    for r in rr:
+        ref_srv.submit(r)
+    ref_srv.run()
+    ref = _streams(rr)
+    d = Durability(str(tmp_path), snapshot_every=3)
+    srv = SynergyServer(cfg, params, durable=d,
+                        crash_plan=CrashPlan(at_step=5), **kw)
+    with pytest.raises(SimulatedCrash):
+        for r in _reqs():
+            srv.submit(r)
+        srv.run()
+    with open(d.journal_path, "ab") as f:        # die mid-append
+        f.write(_HDR.pack(64, 123456) + b"torn")
+    srv2 = SynergyServer.restore(cfg, params, durable=d, **kw)
+    assert srv2._journal.truncated_bytes > 0
+    srv2.run()
+    for rid, r in srv2.restored_requests.items():
+        assert list(r.out) == ref[rid]
+
+
+def test_restore_mismatch_on_forged_journal(model, tmp_path):
+    """A journal whose recorded token disagrees with the recomputation
+    must raise RestoreMismatch (and flight-dump) — serving must not
+    resume from state that is not the crashed process's state."""
+    from repro.obs import FlightRecorder, Tracer
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4)
+    d = Durability(str(tmp_path / "w"), snapshot_every=0)
+    srv = SynergyServer(cfg, params, durable=d,
+                        crash_plan=CrashPlan(at_step=6), **kw)
+    with pytest.raises(SimulatedCrash):
+        for r in _reqs():
+            srv.submit(r)
+        srv.run()
+    recs, _, _ = RequestJournal.scan(d.journal_path)
+    forged, done = [], False
+    for rec in recs:
+        if not done and rec["t"] == "tok":
+            rec = dict(rec, e=[[rid, slot, (tok + 1) % 128]
+                               for rid, slot, tok in rec["e"]])
+            done = True
+        forged.append(rec)
+    assert done
+    with open(d.journal_path, "wb") as f:
+        for rec in forged:
+            payload = json.dumps(rec, separators=(",", ":")).encode()
+            f.write(_HDR.pack(len(payload), zlib.crc32(payload)))
+            f.write(payload)
+    tr = Tracer(capacity=256)
+    fr = FlightRecorder(tr, dir=str(tmp_path / "dumps"))
+    with pytest.raises(RestoreMismatch):
+        SynergyServer.restore(cfg, params, durable=d, tracer=tr,
+                              flight_recorder=fr, **kw)
+    assert len(fr.dumps) == 1
+    dump = json.loads(open(fr.dumps[0]).read())
+    assert dump["reason"] == "restore_mismatch"
+
+
+# ------------------------------------ snapshot state: field round-trips
+
+def test_pool_state_round_trips_field_by_field(model, tmp_path):
+    """Calibrator EMA, learned engine rates, and health baselines ride
+    the snapshot: a restore into a FRESH pool starts with the crashed
+    pool's state, field by field (the seed Checkpointer is no longer
+    orphaned — it carries live serving state)."""
+    from repro.engines import get_engine
+    from repro.quant import QuantizedEngine
+    cfg, params = model
+    pol = HealthPolicy(alpha=0.5, quarantine_below=0.0,
+                       readmit_above=0.0)
+    kw = dict(slots=2, max_len=32, prefill_len=4, max_inflight=0)
+
+    def pool():
+        return [QuantizedEngine(get_engine("xla"), name="dur-int8"),
+                "F-PE"]
+
+    d = Durability(str(tmp_path), snapshot_every=0,
+                   async_snapshots=False)
+    with SynergyRuntime(pool(), name="dur-a",
+                        rates_path=str(tmp_path / "r1.json"),
+                        health=pol) as rt:
+        srv = SynergyServer(cfg, params, runtime=rt,
+                            prefill_cnn=TINY_CNN, durable=d, **kw)
+        for r in _reqs(3):
+            srv.submit(r)
+        for _ in range(4):
+            srv.step()
+        srv.snapshot()
+        want_rt = rt.state_snapshot()
+        cal = srv._calibration_engine().calibrator.export_state()
+        assert cal and want_rt["macs_per_s"]
+    with SynergyRuntime(pool(), name="dur-b",
+                        rates_path=str(tmp_path / "r2.json"),
+                        health=pol) as rt2:
+        srv2 = SynergyServer(cfg, params, runtime=rt2,
+                             prefill_cnn=TINY_CNN, **kw)
+        from repro.soc.durable import load_snapshot
+        from repro.checkpoint import Checkpointer
+        _, flat = load_snapshot(Checkpointer(d.snapshot_dir))
+        srv2._apply_snapshot(flat)
+        got_rt = rt2.state_snapshot()
+        assert got_rt["macs_per_s"] == want_rt["macs_per_s"]
+        for name, h in want_rt["health"].items():
+            assert got_rt["health"][name] == h
+        assert (srv2._calibration_engine().calibrator.export_state()
+                == cal)
+
+
+def test_crash_restore_with_runtime_pool(model, tmp_path):
+    """End-to-end over a real pool (int8 + F-PE, health, sidecar): the
+    restored server finishes every request with the reference streams and
+    replay books runtime work into replayed_jobs, not runtime_jobs."""
+    from repro.engines import get_engine
+    from repro.quant import QuantizedEngine
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4, max_inflight=1)
+
+    def pool(tag):
+        return [QuantizedEngine(get_engine("xla"), name=f"ci8-{tag}"),
+                "F-PE"]
+
+    with SynergyRuntime(pool("ref"), name="dur-ref") as rt:
+        ref_srv = SynergyServer(cfg, params, runtime=rt,
+                                prefill_cnn=TINY_CNN, **kw)
+        rr = _reqs(3)
+        for r in rr:
+            ref_srv.submit(r)
+        ref_srv.run()
+    ref = _streams(rr)
+    d = Durability(str(tmp_path), snapshot_every=3)
+    with SynergyRuntime(pool("a"), name="dur-x") as rt:
+        srv = SynergyServer(cfg, params, runtime=rt,
+                            prefill_cnn=TINY_CNN, durable=d,
+                            crash_plan=CrashPlan(at_step=4), **kw)
+        with pytest.raises(SimulatedCrash):
+            for r in _reqs(3):
+                srv.submit(r)
+            srv.run()
+        rt.shutdown()
+    with SynergyRuntime(pool("a"), name="dur-y") as rt2:
+        srv2 = SynergyServer.restore(cfg, params, durable=d,
+                                     runtime=rt2,
+                                     prefill_cnn=TINY_CNN, **kw)
+        if srv2.stats.replayed_tokens:
+            assert srv2.stats.replayed_jobs > 0
+        srv2.run()
+        for rid, r in srv2.restored_requests.items():
+            assert list(r.out) == ref[rid]
+        assert (srv2.stats.tokens_out + srv2.stats.replayed_tokens
+                == sum(max(0, len(v) - 1) for v in ref.values()))
+
+
+# --------------------------------------------------- no double counting
+
+def test_replay_does_not_double_count(model, tmp_path):
+    """Restored counters seed from the snapshot and replay books ONLY
+    replayed_tokens — the sum of fresh tokens over (crashed run, restored
+    run) equals one uninterrupted run exactly."""
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4)
+    ref_srv = SynergyServer(cfg, params, **kw)
+    rr = _reqs()
+    for r in rr:
+        ref_srv.submit(r)
+    ref_srv.run()
+    d = Durability(str(tmp_path), snapshot_every=2)
+    srv = SynergyServer(cfg, params, durable=d,
+                        crash_plan=CrashPlan(at_step=7), **kw)
+    with pytest.raises(SimulatedCrash):
+        for r in _reqs():
+            srv.submit(r)
+        srv.run()
+    srv2 = SynergyServer.restore(cfg, params, durable=d, **kw)
+    srv2.run()
+    assert (srv2.stats.tokens_out + srv2.stats.replayed_tokens
+            == ref_srv.stats.tokens_out)
+    for r in srv2.restored_requests.values():
+        assert len(r.out) == r.max_new_tokens and r.done_at is not None
+    assert srv2.stats.snapshots >= 1 and srv2.stats.restores == 1
+
+
+# -------------------------------------------------------- drain / close
+
+def test_close_drains_snapshots_and_rejects(model, tmp_path):
+    from repro.soc import AdmissionRejected
+    cfg, params = model
+    kw = dict(slots=2, max_len=32, prefill_len=4)
+    d = Durability(str(tmp_path), snapshot_every=0)
+    srv = SynergyServer(cfg, params, durable=d, **kw)
+    rr = _reqs(2)
+    for r in rr:
+        srv.submit(r)
+    srv.step()                                   # admit the wave
+    srv.close()
+    # LIVE generations ran to completion (close stops admission only)
+    assert all(len(r.out) == r.max_new_tokens for r in rr)
+    with pytest.raises(AdmissionRejected):
+        srv.submit(Request(99, jnp.arange(4, dtype=jnp.int32),
+                           max_new_tokens=2))
+    from repro.checkpoint import Checkpointer
+    assert Checkpointer(d.snapshot_dir).latest_step() is not None
+    assert srv._journal._f.closed
+
+
+def test_close_snapshot_preserves_pending_for_restore(model, tmp_path):
+    """Requests still queued when the deadline cuts close() short are in
+    the final snapshot: restore picks them up and serves them with the
+    reference streams (graceful handoff, not loss)."""
+    cfg, params = model
+    kw = dict(slots=1, max_len=32, prefill_len=4)
+    ref_srv = SynergyServer(cfg, params, **kw)
+    rr = _reqs(3)
+    for r in rr:
+        ref_srv.submit(r)
+    ref_srv.run()
+    ref = _streams(rr)
+    d = Durability(str(tmp_path), snapshot_every=0)
+    srv = SynergyServer(cfg, params, durable=d, **kw)
+    for r in _reqs(3):
+        srv.submit(r)
+    srv.step()                                   # admit only the first
+    srv.close(deadline_s=0.0)                    # deadline: stop NOW
+    srv2 = SynergyServer.restore(cfg, params, durable=d, **kw)
+    srv2.run()
+    for rid, r in srv2.restored_requests.items():
+        assert list(r.out) == ref[rid]
+    assert len(srv2.restored_requests) == 3
+
+
+def test_request_drain_stops_run_loop(model, tmp_path):
+    cfg, params = model
+    d = Durability(str(tmp_path), snapshot_every=0)
+    srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4,
+                        durable=d)
+    rr = _reqs(2)
+    for r in rr:
+        srv.submit(r)
+    srv.step()                                   # admit the wave
+    srv.request_drain()
+    srv.run()
+    assert all(len(r.out) == r.max_new_tokens for r in rr)
+    assert srv._journal._f.closed                # close() ran
+
+
+_SIGTERM_CHILD = textwrap.dedent("""
+    import os, signal, sys, threading
+    import jax, jax.numpy as jnp
+    from repro.configs import ARCHS, reduced
+    from repro.core.serving import Request, SynergyServer
+    from repro.models import init_model
+    from repro.soc import Durability, install_sigterm_drain
+
+    cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                  n_heads=2, d_ff=64, vocab=128)
+    params = init_model(cfg, jax.random.key(0))
+    srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4,
+                        durable=Durability(sys.argv[1], snapshot_every=0))
+    install_sigterm_drain(srv)
+    for i in range(60):
+        srv.submit(Request(i, jnp.arange(4, dtype=jnp.int32) + i,
+                           max_new_tokens=40))
+    threading.Timer(0.2, os.kill,
+                    (os.getpid(), signal.SIGTERM)).start()
+    stats = srv.run(max_steps=100_000)
+    print("DONE", stats.tokens_out, flush=True)
+""")
+
+
+def test_sigterm_drains_to_clean_snapshot(tmp_path):
+    """SIGTERM mid-run must end in a clean snapshot + closed journal, not
+    a dead process — and a restore from that directory serves whatever
+    the drain left pending."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _SIGTERM_CHILD, str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=240)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DONE" in out.stdout
+    from repro.checkpoint import Checkpointer
+    assert Checkpointer(str(tmp_path / "snapshots")).latest_step() \
+        is not None
+    # the journal tail is intact (clean close, no torn record)
+    _, _, torn = RequestJournal.scan(str(tmp_path / "journal.bin"))
+    assert not torn
+
+
+# --------------------------------------------------------- observability
+
+def test_trace_and_metrics_cover_durability(model, tmp_path):
+    from repro.obs import MetricsRegistry, Tracer, render_prometheus
+    cfg, params = model
+    tr = Tracer(capacity=512)
+    d = Durability(str(tmp_path), snapshot_every=2,
+                   async_snapshots=False)
+    srv = SynergyServer(cfg, params, slots=2, max_len=32, prefill_len=4,
+                        durable=d, tracer=tr)
+    for r in _reqs(2):
+        srv.submit(r)
+    srv.run()
+    srv.close()
+    kinds = {e.kind for e in tr.events()}
+    assert {"snapshot", "drain"} <= kinds
+    text = render_prometheus(server=srv,
+                             registry=MetricsRegistry())
+    assert "repro_serve_snapshots_total" in text
+    assert "repro_serve_replayed_tokens_total" in text

@@ -1,0 +1,125 @@
+"""Hypothesis property tests for durable serving (ISSUE 10 keystone).
+
+For RANDOM crash points, admission modes (blocking wave vs chunked
+prefill), and a torn-or-clean journal tail, over a 2-tenant server:
+
+  * every token stream after ``SynergyServer.restore`` is BITWISE
+    identical to the uninterrupted run's;
+  * every accepted request is served exactly once — restored
+    ``tokens_out`` + ``replayed_tokens`` equals the uninterrupted run's
+    ``tokens_out``, and no request finishes short or long;
+  * FairShare virtual times converge to the uninterrupted run's.
+
+The fixed-point sweeps in ``test_durable.py`` cover the same invariants
+when the hypothesis dev-dependency is absent.
+"""
+
+import shutil
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev deps
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import ARCHS, reduced                  # noqa: E402
+from repro.core.serving import Request, SynergyServer     # noqa: E402
+from repro.models import init_model                       # noqa: E402
+from repro.soc import (CrashPlan, Durability, QosClass,   # noqa: E402
+                       SimulatedCrash, Tenant)
+
+_HDR = struct.Struct("<II")
+
+_MODEL = None
+_REF = {}          # chunked -> (streams, tokens_out, fair_vt)
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=32,
+                      n_heads=2, d_ff=64, vocab=128)
+        _MODEL = cfg, init_model(cfg, jax.random.key(0))
+    return _MODEL
+
+
+def _tenants():
+    return [Tenant("acme", QosClass("interactive", priority=1,
+                                    weight=2.0)),
+            Tenant("bulk", QosClass("bulk", priority=0, weight=1.0))]
+
+
+def _kw(chunked):
+    kw = dict(slots=2, max_len=32, prefill_len=4)
+    if chunked:
+        kw["prefill_chunk_macs"] = 2_000
+    return kw
+
+
+def _reqs():
+    return [Request(i, jnp.arange(4, dtype=jnp.int32) + i,
+                    max_new_tokens=5,
+                    tenant="acme" if i % 2 == 0 else "bulk")
+            for i in range(5)]
+
+
+def _reference(chunked):
+    """The uninterrupted run for one admission mode (computed once)."""
+    if chunked not in _REF:
+        cfg, params = _model()
+        srv = SynergyServer(cfg, params, tenants=_tenants(),
+                            **_kw(chunked))
+        rr = _reqs()
+        for r in rr:
+            srv.submit(r)
+        srv.run()
+        _REF[chunked] = ({r.rid: list(r.out) for r in rr},
+                         srv.stats.tokens_out, srv._fair.snapshot())
+    return _REF[chunked]
+
+
+@settings(max_examples=10, deadline=None)
+@given(crash_at=st.integers(1, 16), chunked=st.booleans(),
+       snapshot_every=st.sampled_from([0, 2, 4]),
+       torn_tail=st.booleans())
+def test_crash_restore_is_exactly_once_and_bitwise(
+        crash_at, chunked, snapshot_every, torn_tail):
+    cfg, params = _model()
+    ref, ref_tokens, ref_vt = _reference(chunked)
+    work = tempfile.mkdtemp(prefix="durprop-")
+    try:
+        d = Durability(work, snapshot_every=snapshot_every)
+        srv = SynergyServer(cfg, params, tenants=_tenants(), durable=d,
+                            crash_plan=CrashPlan(at_step=crash_at),
+                            **_kw(chunked))
+        rr = _reqs()
+        try:
+            for r in rr:
+                srv.submit(r)
+            srv.run()
+            return        # finished before the crash point: nothing to do
+        except SimulatedCrash:
+            pass
+        if torn_tail:     # the dying process half-wrote one more record
+            with open(d.journal_path, "ab") as f:
+                f.write(_HDR.pack(77, 0) + b"half-a-record")
+        srv2 = SynergyServer.restore(cfg, params, durable=d,
+                                     tenants=_tenants(), **_kw(chunked))
+        if torn_tail:
+            assert srv2._journal.truncated_bytes > 0
+        srv2.run()
+        got = {rid: list(r.out)
+               for rid, r in srv2.restored_requests.items()}
+        for r in rr:
+            assert got.get(r.rid, list(r.out)) == ref[r.rid], \
+                (crash_at, chunked, r.rid)
+        assert (srv2.stats.tokens_out + srv2.stats.replayed_tokens
+                == ref_tokens), (crash_at, chunked)
+        assert srv2._fair.snapshot() == ref_vt, (crash_at, chunked)
+        for r in srv2.restored_requests.values():
+            assert len(r.out) == r.max_new_tokens     # exactly once
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
